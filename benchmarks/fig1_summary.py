@@ -1,0 +1,29 @@
+"""Figure 1 analog: relative recovery time and PCG-iteration ratios
+(feGRASS / pdGRASS) per graph x alpha.  >1 on either axis means pdGRASS
+improves on that metric."""
+from __future__ import annotations
+
+from benchmarks import table2_quality
+
+
+def run():
+    rows = table2_quality.run(scale="small", quality=True)
+    out = []
+    for r in rows:
+        out.append({
+            "graph": r["graph"], "alpha": r["alpha"],
+            "time_ratio": round(r["T_fe_ms"] / max(r["T_pd_ms"], 1e-3), 2),
+            "iter_ratio": r.get("iter_ratio", float("nan")),
+        })
+    return out
+
+
+def main():
+    rows = run()
+    print("graph,alpha,time_ratio_fe_over_pd,iter_ratio_fe_over_pd")
+    for r in rows:
+        print(f"{r['graph']},{r['alpha']},{r['time_ratio']},{r['iter_ratio']}")
+
+
+if __name__ == "__main__":
+    main()

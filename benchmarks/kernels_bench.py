@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp reference.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+the numbers measure correctness-path overhead, not TPU performance; the
+jnp reference path is what the CPU actually runs in production here.
+Shapes sweep the regimes the recovery engine uses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for K, m in [(16, 4096), (64, 16384), (128, 65536)]:
+        c1 = 9
+        mk = lambda r: jnp.asarray(   # noqa: E731
+            rng.integers(0, 1000, (r, c1)).astype(np.int32))
+        csu, csv, esu, esv = mk(K), mk(K), mk(m), mk(m)
+        cbeta = jnp.asarray(rng.integers(0, c1, K).astype(np.int32))
+        cseg = jnp.asarray(rng.integers(0, 8, K).astype(np.int32))
+        eseg = jnp.asarray(rng.integers(0, 8, m).astype(np.int32))
+
+        t_ref, _ = timeit(lambda: np.asarray(ops.similarity_mark_ref(
+            csu, csv, cbeta, cseg, esu, esv, eseg)), repeat=3)
+        rows.append((f"similarity_ref_K{K}_m{m}", t_ref * 1e6,
+                     f"pairs={K*m}"))
+        t_int, _ = timeit(lambda: np.asarray(ops.similarity_mark(
+            csu, csv, cbeta, cseg, esu, esv, eseg, tile_m=2048)), repeat=1)
+        rows.append((f"similarity_pallas_interp_K{K}_m{m}", t_int * 1e6,
+                     "interpret=True"))
+
+    for n, L in [(4096, 8), (65536, 8)]:
+        idx = jnp.asarray(rng.integers(0, n, (n, L)).astype(np.int32))
+        val = jnp.asarray(rng.standard_normal((n, L)).astype(np.float32))
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        t_ref, _ = timeit(lambda: np.asarray(ops.spmv_ref(idx, val, x)),
+                          repeat=3)
+        rows.append((f"spmv_ref_n{n}", t_ref * 1e6, f"nnz={n*L}"))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""§Perf (paper side, measured on CPU): recovery-engine hillclimbing.
+
+Baseline = the paper-faithful sequential greedy (serial oracle).  Each
+variant keeps bit-identical output (asserted) while restructuring the
+schedule — the table records the hypothesis -> measure loop summarized
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import barabasi_albert, mesh2d, prepare
+from repro.core.recovery import recover_rounds, recover_serial
+
+
+def run():
+    rows = []
+    for name, g in [("mesh_uniform", mesh2d(60, 60, seed=1)),
+                    ("ba_skewed", barabasi_albert(4000, 3, seed=2))]:
+        prep = prepare(g)
+        t_serial, ref = timeit(recover_serial, prep.problem, repeat=1)
+        rows.append((f"{name}/serial_paper_faithful", t_serial * 1e6, "baseline"))
+        for B, K, tag in [(1, 8, "B1_K8_minimal"),
+                          (16, 128, "B16_K128_default"),
+                          (64, 512, "B64_K512_wide"),
+                          (16, 128, "B16_K128_stop_at_target")]:
+            stop = tag.endswith("stop_at_target")
+
+            def go():
+                st, stats = recover_rounds(
+                    prep.problem, np.int32(int(0.1 * g.n)),
+                    block_size=B, max_candidates=K,
+                    stop_at_target=stop)
+                return np.asarray(st), stats
+
+            t, (st, stats) = timeit(go, repeat=3)
+            if not stop:
+                assert np.array_equal(st, ref), (name, tag)
+            rows.append((f"{name}/rounds_{tag}", t * 1e6,
+                         f"rounds={int(stats.rounds)};"
+                         f"speedup={t_serial/max(t,1e-9):.1f}x"))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Render the dry-run JSON artifacts into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="experiments"):
+    rows = {}
+    for f in glob.glob(os.path.join(out_dir, "dryrun_*.json")):
+        for r in json.load(open(f)):
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return sorted(rows.values(), key=lambda r: (r["mesh"], r["arch"],
+                                                r["shape"]))
+
+
+def fmt(x, p=3):
+    if x == 0:
+        return "0"
+    return f"{x:.{p}e}"
+
+
+def table(rows, mesh):
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | args+temp GB/dev | 6ND/2ND / HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | skipped: sub-quadratic required |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | "
+                         f"| {r.get('error','')[:60]} |")
+            continue
+        mem = r["arg_gb"] + r["temp_gb"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['t_compute'])} "
+            f"| {fmt(r['t_memory'])} | {fmt(r['t_collective'])} "
+            f"| {r['bottleneck']} | {mem:.1f} | {r['useful_ratio']:.3f} | |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    for mesh in sorted({r["mesh"] for r in rows}):
+        print(f"\n### Mesh {mesh}\n")
+        print(table(rows, mesh))
+
+
+if __name__ == "__main__":
+    main()

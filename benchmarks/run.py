@@ -1,0 +1,37 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+  table2_quality  -> Table II  (recovery runtime, passes, PCG iters)
+  table3_jbp      -> Table III (Judge-Before-Parallel statistics)
+  table4_scaling  -> Table IV / Figs 6-8 (strong scaling, work-span)
+  fig1_summary    -> Figure 1  (relative time/quality ratios)
+  kernels_bench   -> Pallas kernel shape sweep (interpret mode on CPU)
+
+Prints ``name,us_per_call,derived`` CSV per section; roofline terms for
+the (arch x shape) cells come from ``repro.launch.dryrun`` artifacts and
+are summarized in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig1_summary, kernels_bench, table2_quality,
+                            table3_jbp, table4_scaling)
+
+    sections = [
+        ("table2_quality", table2_quality.main),
+        ("table3_jbp", table3_jbp.main),
+        ("table4_scaling", table4_scaling.main),
+        ("fig1_summary", fig1_summary.main),
+        ("kernels_bench", kernels_bench.main),
+    ]
+    for name, fn in sections:
+        print(f"\n=== {name} ===")
+        t0 = time.perf_counter()
+        fn()
+        print(f"# section_runtime,{(time.perf_counter()-t0)*1e6:.0f},{name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Table IV / Figs 6-8 analog: parallel scaling of pdGRASS recovery.
+
+This container exposes ONE physical core, so OpenMP-style thread scaling
+cannot be measured directly.  We report what the work-span framework
+gives us (the paper's own analysis model, Section II.D):
+
+  * measured work: serial-engine wall time (numpy oracle),
+  * measured vectorized time: the JAX round engine (the "infinite-width
+    SIMD" point of the design),
+  * per-subtask work distribution -> predicted strong scaling
+    T_p = max(outer LPT makespan over p workers, largest inner task / p)
+    for the paper's thread counts (1/8/32), on both a uniform input
+    (mesh ~ M6) and a skewed one (star/BA ~ com-Youtube).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import barabasi_albert, mesh2d, prepare, star_hub
+from repro.core.distributed import partition_subtasks
+from repro.core.recovery import recover_rounds, recover_serial
+
+
+def predicted_speedup(sizes: np.ndarray, p: int, cutoff=None) -> float:
+    """LPT outer + inner-parallel giants (work ~ |S|^2 pessimistic bound)."""
+    work = (sizes.astype(np.float64) ** 2)
+    total = work.sum()
+    if total == 0:
+        return 1.0
+    shard_of, giants, _ = partition_subtasks(sizes, p, cutoff=cutoff)
+    load = np.zeros(p)
+    for sid, sh in enumerate(shard_of):
+        if sh >= 0:
+            load[sh] += work[sid]
+    inner = sum(work[g] / p for g in giants)  # giants split across workers
+    t_p = load.max() + inner
+    return float(total / max(t_p, 1e-9))
+
+
+def run():
+    rows = []
+    for name, g in [("uniform_mesh", mesh2d(70, 70, seed=1)),
+                    ("skewed_ba", barabasi_albert(5000, 4, seed=2)),
+                    ("skewed_star", star_hub(3000, extra=2500, seed=3))]:
+        prep = prepare(g)
+        t_serial, _ = timeit(recover_serial, prep.problem, repeat=1)
+        t_vec, _ = timeit(
+            lambda: recover_rounds(prep.problem, block_size=16,
+                                   max_candidates=128,
+                                   stop_at_target=False)[0].block_until_ready(),
+            repeat=3)
+        sizes = prep.subtask_sizes
+        rows.append({
+            "graph": name, "n_subtasks": len(sizes),
+            "max_subtask_pct": round(100 * sizes.max() / sizes.sum(), 1),
+            "T_serial_ms": round(t_serial * 1e3, 1),
+            "T_vectorized_ms": round(t_vec * 1e3, 1),
+            "vec_speedup": round(t_serial / max(t_vec, 1e-9), 1),
+            "pred_speedup_p8": round(predicted_speedup(sizes, 8), 1),
+            "pred_speedup_p32": round(predicted_speedup(sizes, 32), 1),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))
+
+
+if __name__ == "__main__":
+    main()

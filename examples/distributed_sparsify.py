@@ -1,0 +1,41 @@
+"""Multi-device pdGRASS: the paper's mixed parallel strategy on a JAX mesh.
+
+Runs with 8 emulated host devices (set before jax import) — subtasks are
+LPT-packed onto devices (outer parallelism); subtasks above the cutoff go
+through the cross-device inner engine (one all_gather of candidates per
+round).  Verifies bit-identical output vs the serial oracle.
+
+    PYTHONPATH=src python examples/distributed_sparsify.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import barabasi_albert, prepare  # noqa: E402
+from repro.core.distributed import partition_subtasks, recover_mixed  # noqa: E402
+from repro.core.recovery import recover_serial  # noqa: E402
+
+
+def main():
+    g = barabasi_albert(3000, 4, seed=0)
+    print(f"graph: |V|={g.n} |E|={g.m}, devices={jax.device_count()}")
+    prep = prepare(g, chunk=512)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    shard_of, giants, load = partition_subtasks(
+        prep.subtask_sizes, jax.device_count())
+    print(f"subtasks={prep.n_subtasks} giants={len(giants)} "
+          f"outer load per device={load.tolist()}")
+    status = recover_mixed(prep, mesh, chunk=512)
+    ref = recover_serial(prep.problem)
+    assert np.array_equal(status, ref), "distributed != serial!"
+    print(f"recovered={int((status == 1).sum())} — "
+          f"bit-identical to the serial oracle. OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: pdGRASS graph spectral sparsification + multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,21 @@
+"""pdGRASS core: parallel density-aware graph spectral sparsification in JAX.
+
+Public API:
+    build_graph / generators      (repro.core.graph)
+    prepare, pdgrass, Sparsifier  (repro.core.sparsify)
+    fegrass                       (repro.core.fegrass)  -- baseline
+    pcg_host, pcg_jax, quality_iters (repro.core.pcg)
+"""
+from repro.core.graph import (Graph, build_graph, grid2d, mesh2d,
+                              barabasi_albert, watts_strogatz, random_regular,
+                              star_hub, suite)
+from repro.core.sparsify import Prepared, Sparsifier, prepare, pdgrass
+from repro.core.fegrass import fegrass
+from repro.core.pcg import pcg_host, pcg_jax, quality_iters
+
+__all__ = [
+    "Graph", "build_graph", "grid2d", "mesh2d", "barabasi_albert",
+    "watts_strogatz", "random_regular", "star_hub", "suite",
+    "Prepared", "Sparsifier", "prepare", "pdgrass", "fegrass",
+    "pcg_host", "pcg_jax", "quality_iters",
+]

@@ -1,0 +1,301 @@
+"""Step 4 of pdGRASS: strict-similarity off-tree edge recovery.
+
+Two engines, bit-identical on the same input (property-tested):
+
+  * :func:`recover_serial` — numpy oracle, a direct transcription of the
+    paper's sequential per-subtask greedy (Algorithm 1, step 4).
+  * :func:`recover_rounds` — the JAX/TPU engine.  Each *round* picks, for
+    every active subtask, the first ``block_size`` unprocessed edges
+    (globally capped at ``max_candidates``), resolves ordering *inside*
+    the candidate block with a tiny sequential scan (Lemma 8:
+    non-commutativity forces in-order processing), then marks the rest of
+    each subtask against the newly recovered edges in one flat vectorized
+    pass.  This is the paper's "mixed parallel strategy": the outer
+    parallelism over subtasks (Lemma 7: disjointness) and the inner
+    blocked parallelism within large subtasks both become flat vector
+    work over the whole edge array.
+
+Similarity checks use the ancestor-signature reduction from
+``lifting.ancestor_signatures`` — (c+1)^2 integer equality tests instead
+of BFS — which is what the Pallas kernel in ``repro.kernels.similarity``
+accelerates on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+STATUS_OPEN = 0       # not yet processed
+STATUS_RECOVERED = 1  # recovered into the sparsifier
+STATUS_SKIPPED = 2    # marked strictly similar to an earlier recovered edge
+
+
+class RecoveryProblem(NamedTuple):
+    """Flat per-off-tree-edge arrays, sorted by (subtask id asc, score desc).
+
+    Padding rows (to a multiple of the chunk size) carry ``seg == -1``.
+    """
+
+    sig_u: jnp.ndarray   # [m, c+1] int32 ancestor signature of endpoint u
+    sig_v: jnp.ndarray   # [m, c+1] int32 ancestor signature of endpoint v
+    beta: jnp.ndarray    # [m] int32  beta* = min(d(u,lca), d(v,lca), c)
+    seg: jnp.ndarray     # [m] int32  contiguous subtask ids (-1 = padding)
+    score: jnp.ndarray   # [m] float32 spectral criticality (w * R_T)
+
+    @property
+    def m(self) -> int:
+        return int(self.sig_u.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Similarity predicate (shared by both engines)
+# ---------------------------------------------------------------------------
+
+def _apb_table(c1: int) -> np.ndarray:
+    a = np.arange(c1)
+    return (a[:, None] + a[None, :]).astype(np.int32)  # [c1, c1]
+
+
+def match_table(sig_a: jnp.ndarray, sig_b: jnp.ndarray, beta_a: jnp.ndarray):
+    """``[..., I, c1]`` x ``[..., J, c1]`` -> ``[..., I, J]`` bool.
+
+    Entry (i, j) is True iff tree-dist(a_i, b_j) <= beta_a[i]; i.e. b_j lies
+    in the beta_a[i]-hop neighborhood of a_i.
+    """
+    c1 = sig_a.shape[-1]
+    apb = jnp.asarray(_apb_table(c1))
+    eq = sig_a[..., :, None, :, None] == sig_b[..., None, :, None, :]
+    ok = eq & (apb <= beta_a[..., :, None, None, None])
+    return jnp.any(ok, axis=(-1, -2))
+
+
+def strict_similarity_matrix(sig_u_a, sig_v_a, beta_a, sig_u_b, sig_v_b):
+    """[I, J] bool: edge a_i (recovered) marks edge b_j (Definition 5).
+
+    sim = (u_j in S_{u_i}  and  v_j in S_{v_i})
+       or (u_j in S_{v_i}  and  v_j in S_{u_i})
+    """
+    m_uu = match_table(sig_u_a, sig_u_b, beta_a)
+    m_vv = match_table(sig_v_a, sig_v_b, beta_a)
+    m_uv = match_table(sig_u_a, sig_v_b, beta_a)
+    m_vu = match_table(sig_v_a, sig_u_b, beta_a)
+    return (m_uu & m_vv) | (m_uv & m_vu)
+
+
+# ---------------------------------------------------------------------------
+# Serial oracle (numpy) — faithful transcription of the paper's step 4
+# ---------------------------------------------------------------------------
+
+def recover_serial(prob: RecoveryProblem) -> np.ndarray:
+    """Greedy in-order recovery per subtask; returns status[m] (numpy)."""
+    sig_u = np.asarray(prob.sig_u)
+    sig_v = np.asarray(prob.sig_v)
+    beta = np.asarray(prob.beta)
+    seg = np.asarray(prob.seg)
+    m = seg.shape[0]
+    status = np.full(m, STATUS_SKIPPED, dtype=np.int8)
+    status[seg >= 0] = STATUS_OPEN
+
+    # segments are contiguous
+    bounds = np.flatnonzero(np.diff(np.concatenate([[-2], seg])) != 0)
+    bounds = np.concatenate([bounds, [m]])
+    c1 = sig_u.shape[1]
+    apb = _apb_table(c1)
+
+    def in_hood(sig_x, sig_ys, b):
+        # sig_x [c1], sig_ys [k, c1] -> [k] bool
+        eq = sig_x[None, :, None] == sig_ys[:, None, :]
+        return np.any(eq & (apb[None] <= b), axis=(1, 2))
+
+    for s in range(len(bounds) - 1):
+        lo, hi = bounds[s], bounds[s + 1]
+        if lo >= m or seg[lo] < 0:
+            continue
+        for i in range(lo, hi):
+            if status[i] != STATUS_OPEN:
+                continue
+            status[i] = STATUS_RECOVERED
+            rest = np.arange(i + 1, hi)
+            rest = rest[status[rest] == STATUS_OPEN]
+            if rest.size == 0:
+                continue
+            b = beta[i]
+            uu = in_hood(sig_u[i], sig_u[rest], b)
+            vv = in_hood(sig_v[i], sig_v[rest], b)
+            uv = in_hood(sig_u[i], sig_v[rest], b)
+            vu = in_hood(sig_v[i], sig_u[rest], b)
+            sim = (uu & vv) | (uv & vu)
+            status[rest[sim]] = STATUS_SKIPPED
+    return status
+
+
+# ---------------------------------------------------------------------------
+# JAX round engine
+# ---------------------------------------------------------------------------
+
+class RoundStats(NamedTuple):
+    rounds: jnp.ndarray           # int32 number of rounds executed
+    candidates: jnp.ndarray       # int32 total candidates examined
+    killed_in_block: jnp.ndarray  # int32 candidates killed inside blocks
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "max_candidates", "stop_at_target", "chunk",
+                     "use_kernel"))
+def recover_rounds(
+    prob: RecoveryProblem,
+    target: jnp.ndarray | int = 2**31 - 1,
+    *,
+    block_size: int = 16,
+    max_candidates: int = 128,
+    stop_at_target: bool = False,
+    chunk: int = 2048,
+    use_kernel: bool = False,
+):
+    """Round-based parallel recovery.  Returns (status[m] int8, RoundStats).
+
+    With ``stop_at_target=False`` the result is bit-identical to
+    :func:`recover_serial`.  With ``stop_at_target=True`` rounds stop as
+    soon as the number of recovered edges reaches ``target`` (the paper's
+    stopping rule); the final sparsifier then truncates to the top
+    ``target`` recovered edges by score either way.
+    """
+    m = prob.m
+    K = max_candidates
+    B = block_size
+    seg, beta = prob.seg, prob.beta
+    sig_u, sig_v = prob.sig_u, prob.sig_v
+    is_edge = seg >= 0
+    status0 = jnp.where(is_edge, STATUS_OPEN, STATUS_SKIPPED).astype(jnp.int8)
+
+    # Exclusive prefix count of rows per segment, for in-segment ranks.
+    # seg ids are contiguous ascending; seg_first[s] = first row of segment s.
+    arange_m = jnp.arange(m, dtype=jnp.int32)
+
+    def cond(state):
+        status, stats = state
+        open_left = jnp.any(status == STATUS_OPEN)
+        if stop_at_target:
+            n_rec = jnp.sum((status == STATUS_RECOVERED).astype(jnp.int32))
+            return open_left & (n_rec < target)
+        return open_left
+
+    def body(state):
+        status, stats = state
+        avail = status == STATUS_OPEN
+        ones = avail.astype(jnp.int32)
+        cums = jnp.cumsum(ones)
+        # in-segment rank among available rows
+        seg_ids = jnp.where(is_edge, seg, 0)
+        first_of_seg = jnp.concatenate(
+            [jnp.array([True]), seg[1:] != seg[:-1]]) & is_edge
+        seg_base = jnp.zeros((m,), jnp.int32).at[
+            jnp.where(first_of_seg, seg_ids, m)
+        ].set(jnp.where(first_of_seg, cums - ones, 0), mode="drop")
+        rank = cums - ones - seg_base[seg_ids]
+        cand = avail & (rank < B)
+        crank = jnp.cumsum(cand.astype(jnp.int32)) - cand.astype(jnp.int32)
+        cand = cand & (crank < K)
+
+        # gather candidate rows (ascending index = processing order)
+        cidx = jnp.sort(jnp.where(cand, arange_m, m))[:K]
+        cvalid = cidx < m
+        ci = jnp.where(cvalid, cidx, 0)
+        csu, csv = sig_u[ci], sig_v[ci]
+        cbeta = jnp.where(cvalid, beta[ci], -1)
+        cseg = jnp.where(cvalid, seg[ci], -2)
+
+        # K x K in-block ordering resolution (Lemma 8: strictly in order)
+        sim = strict_similarity_matrix(csu, csv, cbeta, csu, csv)
+        same = cseg[:, None] == cseg[None, :]
+        later = jnp.arange(K)[None, :] > jnp.arange(K)[:, None]
+        sim = sim & same & later & cvalid[:, None] & cvalid[None, :]
+
+        def scan_body(killed, row):
+            sim_row, idx = row
+            alive = ~killed[idx]
+            killed = killed | jnp.where(alive, sim_row, False)
+            return killed, alive
+
+        # NB: zeros_like(sim[0]) (not zeros((K,))) so the carry inherits the
+        # varying-manual-axes type when running inside shard_map.
+        killed, _ = jax.lax.scan(
+            scan_body, jnp.zeros_like(sim[0]),
+            (sim, jnp.arange(K)))
+        recovered_c = cvalid & ~killed
+
+        new_status = jnp.where(recovered_c, STATUS_RECOVERED, STATUS_SKIPPED)
+        status = status.at[jnp.where(cvalid, cidx, m)].set(
+            new_status.astype(jnp.int8), mode="drop")
+
+        # Flat marking pass: every still-open row vs the recovered candidates
+        # of *its own* segment, chunked over rows to bound VMEM/RAM.
+        # (use_kernel=True routes through the Pallas tile kernel instead.)
+        mark_beta = jnp.where(recovered_c, cbeta, -1)  # -1 disables the row
+
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            kill = kops.similarity_mark(csu, csv, mark_beta, cseg,
+                                        sig_u, sig_v, seg, tile_m=chunk)
+        else:
+            def mark_chunk(start):
+                c1 = sig_u.shape[1]
+                eseg = jax.lax.dynamic_slice(seg, (start,), (chunk,))
+
+                # Chunk pruning (§Perf): segments are contiguous ascending,
+                # so a chunk can only contain marks if some *recovered*
+                # candidate's subtask id falls inside its [lo, hi] range.
+                # Most subtasks close after a few rounds — this turns the
+                # per-round marking pass from O(m*K) into O(active*K).
+                lo, hi = eseg[0], jnp.max(eseg)  # tail padding rows are -1
+                rec_rows = recovered_c & (cseg >= lo) & (cseg <= hi)
+
+                def do_mark(_):
+                    esu = jax.lax.dynamic_slice(sig_u, (start, 0), (chunk, c1))
+                    esv = jax.lax.dynamic_slice(sig_v, (start, 0), (chunk, c1))
+                    sim_mk = strict_similarity_matrix(csu, csv, mark_beta,
+                                                      esu, esv)
+                    same_mk = cseg[:, None] == eseg[None, :]
+                    return jnp.any(sim_mk & same_mk, axis=0)
+
+                # zeros_like(eseg) (not zeros((chunk,))) so the carry type
+                # matches under shard_map's varying-manual-axes tracking
+                return jax.lax.cond(jnp.any(rec_rows), do_mark,
+                                    lambda _: jnp.zeros_like(eseg, bool), 0)
+
+            n_chunks = m // chunk
+            kill = jax.lax.map(
+                mark_chunk, jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+            ).reshape(m)
+        kill = kill & (status == STATUS_OPEN)
+        status = jnp.where(kill, STATUS_SKIPPED, status).astype(jnp.int8)
+
+        stats = RoundStats(
+            rounds=stats.rounds + 1,
+            candidates=stats.candidates + jnp.sum(cvalid.astype(jnp.int32)),
+            killed_in_block=stats.killed_in_block
+            + jnp.sum((cvalid & killed).astype(jnp.int32)),
+        )
+        return status, stats
+
+    # varying-typed zero (plain 0 outside shard_map)
+    zero = jnp.sum(jnp.zeros_like(seg, jnp.int32))
+    stats0 = RoundStats(zero, zero, zero)
+    status, stats = jax.lax.while_loop(cond, body, (status0, stats0))
+    return status, stats
+
+
+def select_top(status, score, target):
+    """Keep the ``target`` highest-score recovered edges (deterministic)."""
+    recovered = status == STATUS_RECOVERED
+    order = jnp.argsort(-jnp.where(recovered, score, -jnp.inf))
+    taken_in_order = jnp.cumsum(recovered[order].astype(jnp.int32))
+    keep_sorted = recovered[order] & (taken_in_order <= target)
+    keep = jnp.zeros_like(recovered).at[order].set(keep_sorted)
+    return keep

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode against the pure-jnp oracles in ref.py; see tests/test_kernels.py):
+
+  similarity.py — strict-similarity marking pass (pdGRASS step 4's
+                  quadratic term; candidate signatures VMEM-resident,
+                  edge slabs streamed).
+  ssm_scan.py   — fused Mamba1 selective scan (the falcon-mamba/hymba
+                  memory-roofline fix; §Perf I3).
+  spmv_ell.py   — ELLPACK Laplacian SpMV (PCG inner loop).
+"""
+from repro.kernels import ops  # noqa: F401

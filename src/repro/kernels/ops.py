@@ -1,0 +1,49 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``REPRO_KERNEL_INTERPRET=0`` (or pass
+``interpret=False``) and the same pallas_call lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.similarity import similarity_mark as _similarity_mark
+from repro.kernels.spmv_ell import spmv_ell as _spmv_ell, to_ell  # noqa: F401
+
+_INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+def similarity_mark(csu, csv, cbeta, cseg, esu, esv, eseg,
+                    tile_m: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _INTERPRET
+    m = esu.shape[0]
+    if m % tile_m != 0:  # pad to tile multiple with inert rows
+        pad = tile_m - m % tile_m
+        esu = jnp.pad(esu, ((0, pad), (0, 0)), constant_values=-1)
+        esv = jnp.pad(esv, ((0, pad), (0, 0)), constant_values=-1)
+        eseg = jnp.pad(eseg, (0, pad), constant_values=-1)
+    out = _similarity_mark(csu, csv, cbeta, cseg, esu, esv, eseg,
+                           tile_m=tile_m, interpret=interpret)
+    return out[:m]
+
+
+def spmv(idx, val, x, tile_n: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _INTERPRET
+    n = idx.shape[0]
+    if n % tile_n != 0:
+        pad = tile_n - n % tile_n
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        val = jnp.pad(val, ((0, pad), (0, 0)))
+        out = _spmv_ell(idx, val, x, tile_n=tile_n, interpret=interpret)
+        return out[:n]
+    return _spmv_ell(idx, val, x, tile_n=tile_n, interpret=interpret)
+
+
+similarity_mark_ref = _ref.similarity_mark_ref
+spmv_ref = _ref.spmv_ell_ref

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_mark_ref(csu, csv, cbeta, cseg, esu, esv, eseg):
+    """Reference for kernels.similarity.similarity_mark."""
+    c1 = csu.shape[1]
+    a = jnp.arange(c1)
+    apb = a[:, None] + a[None, :]
+
+    def match(sa, sb):  # [K, c1] x [m, c1] -> [K, m]
+        eq = sa[:, None, :, None] == sb[None, :, None, :]
+        ok = eq & (apb[None, None] <= cbeta[:, None, None, None])
+        return jnp.any(ok, axis=(-1, -2))
+
+    sim = (match(csu, esu) & match(csv, esv)) | (match(csu, esv) & match(csv, esu))
+    sim &= cseg[:, None] == eseg[None, :]
+    return jnp.any(sim, axis=0)
+
+
+def spmv_ell_ref(idx, val, x):
+    """Reference for kernels.spmv_ell.spmv_ell."""
+    return jnp.sum(val * x[idx], axis=1)

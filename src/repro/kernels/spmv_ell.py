@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: ELLPACK SpMV for Laplacian matvecs (PCG inner loop).
+
+The PCG application that consumes the sparsifier spends its time in
+``y = L x``.  Ultra-sparse graph Laplacians (tree + alpha*|V| off-tree
+edges) have bounded row degree after ELL padding, so we store the matrix
+as dense [n, L] (column-index, value) slabs — the TPU-native layout:
+contiguous, MXU/VPU-aligned, no CSR pointer chasing.
+
+Tiling: rows stream through in ``tile_n`` slabs; the x vector stays fully
+VMEM-resident (f32[n]; up to ~2M rows fits comfortably in 16 MB VMEM
+alongside the slabs).  The per-slab gather ``x[idx]`` is a VMEM dynamic
+gather, supported by Mosaic; the multiply-accumulate over the L (padded
+degree) dimension is unrolled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(idx_ref, val_ref, x_ref, out_ref):
+    idx = idx_ref[...]          # [Tn, L] int32
+    val = val_ref[...]          # [Tn, L] f32
+    x = x_ref[...]              # [n] f32 (resident)
+    acc = jnp.zeros((idx.shape[0],), dtype=val.dtype)
+    for l in range(idx.shape[1]):
+        acc = acc + val[:, l] * x[idx[:, l]]
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def spmv_ell(idx, val, x, *, tile_n: int = 256, interpret: bool = True):
+    """y[i] = sum_l val[i, l] * x[idx[i, l]].  Rows padded with val = 0."""
+    n, L = idx.shape
+    assert n % tile_n == 0, (n, tile_n)
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, L), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, L), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),   # x resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), val.dtype)
+        if x.shape[0] == n else jax.ShapeDtypeStruct((n,), val.dtype),
+        interpret=interpret,
+    )(idx, val, x)
+
+
+def to_ell(graph, dtype=jnp.float32):
+    """Host-side: Laplacian of a Graph/edge mask in ELL [n, L] layout."""
+    import numpy as np
+
+    n = graph.n
+    deg = np.diff(graph.indptr)
+    L = int(deg.max()) + 1  # +1 for the diagonal
+    idx = np.zeros((n, L), dtype=np.int32)
+    val = np.zeros((n, L), dtype=np.float64)
+    for v in range(n):
+        lo, hi = graph.indptr[v], graph.indptr[v + 1]
+        k = hi - lo
+        idx[v, :k] = graph.adj[lo:hi]
+        val[v, :k] = -graph.adj_w[lo:hi]
+        idx[v, k] = v
+        val[v, k] = graph.adj_w[lo:hi].sum()
+        idx[v, k + 1:] = v  # padding gathers the row's own x; val = 0
+    return jnp.asarray(idx), jnp.asarray(val.astype(np.float32))

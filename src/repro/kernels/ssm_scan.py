@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused Mamba1 selective scan.
+
+The unfused XLA lowering of the selective scan writes the per-step
+[d_inner, state] decay/state intermediates to HBM — measured at ~2.6 MB
+per token per layer on the falcon-mamba train cell, i.e. a 697 s/step
+memory-roofline term (EXPERIMENTS.md §Perf).  Fusing the scan keeps h in
+VMEM and reduces HBM traffic to the block inputs/outputs:
+
+    reads  : x1, dt  [S, blk]      Bm, Cm  [S, state]     A [blk, state]
+    writes : y [S, blk], h_out [blk, state]
+
+Grid: (batch, d_inner / blk) — each program scans the full sequence for
+one channel block of one batch element; channel blocks are independent
+(the recurrence couples only time), which also matches how the channels
+are sharded over the 'model' axis in the distributed setting.
+
+VMEM at blk=512, S=4096, state=16: x1/dt/y 3x8 MB + small = ~26 MB with
+f32; use S-chunked grids (the ``seq_chunk`` arg) for longer sequences.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
+                 y_ref, hT_ref):
+    # blocks: x/dt [1, S, blk]; b/c [1, S, state]; a [blk, state];
+    #         h0 [1, blk, state]; y [1, S, blk]; hT [1, blk, state]
+    S = x_ref.shape[1]
+    A = a_ref[...]                       # [blk, state]
+    h0 = h0_ref[0]                       # [blk, state]
+
+    def step(t, h):
+        x_t = x_ref[0, t, :]             # [blk]
+        dt_t = dt_ref[0, t, :]           # [blk]
+        B_t = b_ref[0, t, :]             # [state]
+        C_t = c_ref[0, t, :]             # [state]
+        da = jnp.exp(dt_t[:, None] * A)                     # [blk, state]
+        dbx = (dt_t * x_t)[:, None] * B_t[None, :]
+        h = da * h + dbx
+        y_ref[0, t, :] = jnp.sum(h * C_t[None, :], axis=-1)
+        return h
+
+    h = jax.lax.fori_loop(0, S, step, h0)
+    hT_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def ssm_scan(x1, dt, Bm, Cm, A, h0, *, blk: int = 512,
+             interpret: bool = True):
+    """Fused selective scan.  Shapes:
+    x1/dt [B,S,di] f32; Bm/Cm [B,S,state] f32; A [di,state]; h0 [B,di,state].
+    Returns y [B,S,di] (pre-D skip), hT [B,di,state].
+    """
+    B, S, di = x1.shape
+    state = A.shape[1]
+    blk = min(blk, di)
+    assert di % blk == 0
+    grid = (B, di // blk)
+    y, hT = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, blk), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, S, blk), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, S, state), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, S, state), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((blk, state), lambda b, c: (c, 0)),
+            pl.BlockSpec((1, blk, state), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, blk), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, blk, state), lambda b, c: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, state), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x1.astype(jnp.float32), dt.astype(jnp.float32),
+      Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+      A.astype(jnp.float32), h0.astype(jnp.float32))
+    return y, hT
+
+
+def ssm_scan_ref(x1, dt, Bm, Cm, A, h0):
+    """Pure-jnp oracle (same recurrence as models.layers._ssm_step)."""
+    def step(h, t):
+        x_t, dt_t, B_t, C_t = t
+        da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A)
+        dbx = (dt_t * x_t).astype(jnp.float32)[..., None] * B_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.sum(h * C_t.astype(jnp.float32)[:, None, :], axis=-1)
+        return h, y
+
+    xs = (x1.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,309 @@
+"""Trip-count-aware cost accounting over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for
+scan-over-layers models that under-reports FLOPs/bytes by ~n_layers x
+(verified experimentally; see EXPERIMENTS.md §Dry-run).  This module
+re-derives per-device costs from the HLO text itself:
+
+  * parses every computation (brace-matched), builds per-computation
+    symbol tables (op name -> shape),
+  * dot/convolution FLOPs from shapes + contracting dims,
+  * elementwise/reduce FLOPs ~ output elements (coarse, documented),
+  * bytes accessed = operands + results of top-level ops (fusion
+    internals excluded — matches XLA's fusion-boundary accounting),
+  * collective payload bytes by kind (max of operand/result),
+  * ``while`` ops multiply their body+condition cost by the trip count
+    recovered from the condition's ``compare(..., constant(N))``;
+    dynamic whiles fall back to trip=1 and set ``dynamic_whiles``.
+
+Everything is per-device: the input is the SPMD-partitioned module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|[^,)]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs", "floor",
+    "ceil", "sign", "logistic", "cosine", "sine", "select", "compare",
+    "and", "or", "not", "xor", "clamp", "round-nearest-even", "atan2",
+    "expm1", "log1p", "cbrt", "erf",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    args_str: str       # raw text after '(' (operands + attrs)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dynamic_whiles: int = 0
+
+    def __iadd__(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        self.dynamic_whiles += o.dynamic_whiles
+        return self
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.bytes * k,
+                     {a: b * k for a, b in self.coll.items()},
+                     self.dynamic_whiles)
+
+
+def _split_operands(args: str) -> Tuple[List[str], str]:
+    """Split '(%a, %b), attr=1, ...' -> (['%a','%b'], 'attr=1, ...')."""
+    depth = 0
+    out, cur = [], []
+    rest = ""
+    for i, ch in enumerate(args):
+        if ch in "([{":
+            depth += 1
+            cur.append(ch)
+        elif ch in ")]}":
+            if depth == 0:
+                out.append("".join(cur).strip())
+                rest = args[i + 1:]
+                break
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    return [o for o in out if o], rest
+
+
+def parse_module(text: str):
+    """-> computations: name -> (ops, symbol_table name->type_str)."""
+    comps: Dict[str, Tuple[List[Op], Dict[str, str]]] = {}
+    cur_name = None
+    ops: List[Op] = []
+    syms: Dict[str, str] = {}
+    for line in text.splitlines():
+        if cur_name is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur_name = m.group(2)
+                ops, syms = [], {}
+                for pname, ptype in _PARAM_RE.findall(m.group(3)):
+                    syms[pname] = ptype
+            continue
+        if line.strip() == "}":
+            comps[cur_name] = (ops, syms)
+            cur_name = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, kind, args = m.groups()
+        operands, _ = _split_operands(args)
+        opnames = [o.lstrip("%") for o in operands
+                   if o.startswith("%") or re.match(r"^[\w.\-]+$", o)]
+        syms[name] = rtype
+        ops.append(Op(name=name, kind=kind, result_type=rtype,
+                      args_str=args, operands=opnames))
+    return comps
+
+
+def _trip_count(cond_comp: str, comps) -> Optional[int]:
+    """Recover a static trip count from the loop condition computation."""
+    if cond_comp not in comps:
+        return None
+    ops, _ = comps[cond_comp]
+    const = None
+    direction = None
+    stack = [cond_comp]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for op in comps[c][0]:
+            if op.kind == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + op.args_str)
+                if m:
+                    const = int(m.group(1))
+            if op.kind == "compare":
+                m = re.search(r"direction=(\w+)", op.args_str)
+                if m:
+                    direction = m.group(1)
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.args_str)
+                if m:
+                    stack.append(m.group(1))
+    if const is None or const <= 0:
+        return None        # dynamic loop (e.g. `psum(open) > 0` conditions)
+    if direction == "LE":
+        return const + 1
+    if direction == "LT":
+        return const
+    return None            # GT/GE/NE bounds are not scan trip counts
+
+
+def _dot_flops(op: Op, syms) -> float:
+    _, rbytes = _shape_elems_bytes(op.result_type)
+    relems, _ = _shape_elems_bytes(op.result_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.args_str)
+    if not m or not op.operands:
+        return 2.0 * relems
+    lhs_type = syms.get(op.operands[0], "")
+    shapes = _SHAPE_RE.findall(lhs_type)
+    if not shapes:
+        return 2.0 * relems
+    dims = [int(d) for d in shapes[0][1].split(",") if d]
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            k *= dims[int(ci)]
+    return 2.0 * relems * k
+
+
+def _op_cost(op: Op, syms, comps, memo) -> Costs:
+    c = Costs()
+    kind = op.kind
+    relems, rbytes = _shape_elems_bytes(op.result_type)
+    if kind in ("parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "after-all", "iota"):
+        return c
+    # bytes: operands + result (fusion boundary accounting).  Slicing ops
+    # only touch the slice, not the whole operand; in-place updates touch
+    # the update twice (read-modify-write), not the full buffer.
+    if kind in ("dynamic-slice", "gather", "slice"):
+        c.bytes = 2.0 * rbytes
+        return c
+    if kind in ("dynamic-update-slice", "scatter"):
+        upd = 0
+        for o in op.operands[1:]:
+            t = syms.get(o)
+            if t:
+                upd = max(upd, _shape_elems_bytes(t)[1])
+        c.bytes = 2.0 * upd + 8
+        return c
+    ob = 0
+    for o in op.operands:
+        t = syms.get(o)
+        if t:
+            ob += _shape_elems_bytes(t)[1]
+    c.bytes = ob + rbytes
+
+    if kind in COLLECTIVES or any(kind.startswith(k + "-") or kind == k
+                                  for k in COLLECTIVES):
+        base = next(k for k in COLLECTIVES if kind.startswith(k))
+        if kind.endswith("-done"):
+            c.bytes = 0
+            return c
+        payload = max(rbytes, ob)
+        c.coll[base] = float(payload)
+        return c
+
+    if kind == "dot":
+        c.flops = _dot_flops(op, syms)
+    elif kind in ELEMENTWISE:
+        c.flops = float(relems)
+    elif kind in ("reduce", "reduce-window"):
+        c.flops = float(ob // 4 if ob else relems)
+    elif kind == "fusion":
+        m = re.search(r"calls=%?([\w.\-]+)", op.args_str)
+        if m:
+            inner = _comp_cost(m.group(1), comps, memo)
+            c.flops = inner.flops
+            for k, v in inner.coll.items():
+                c.coll[k] = c.coll.get(k, 0.0) + v
+            c.dynamic_whiles += inner.dynamic_whiles
+            # bytes stay at the fusion boundary
+    elif kind == "while":
+        mb = re.search(r"body=%?([\w.\-]+)", op.args_str)
+        mc = re.search(r"condition=%?([\w.\-]+)", op.args_str)
+        if mb:
+            trip = _trip_count(mc.group(1), comps) if mc else None
+            dyn = 0
+            if trip is None:
+                trip, dyn = 1, 1
+            body = _comp_cost(mb.group(1), comps, memo).scaled(trip)
+            cond = (_comp_cost(mc.group(1), comps, memo).scaled(trip)
+                    if mc else Costs())
+            body += cond
+            body.dynamic_whiles += dyn
+            body.bytes += 0  # loop-carried buffers counted inside body ops
+            c.flops = body.flops
+            c.bytes = body.bytes
+            c.coll = body.coll
+            c.dynamic_whiles += body.dynamic_whiles
+    elif kind in ("call", "custom-call", "conditional", "async-start"):
+        for m in re.finditer(r"(?:calls|to_apply|branch_computations)="
+                             r"\{?%?([\w.\-,% ]+)\}?", op.args_str):
+            for cname in re.split(r"[,\s]+", m.group(1)):
+                cname = cname.lstrip("%")
+                if cname in comps:
+                    inner = _comp_cost(cname, comps, memo)
+                    c.flops += inner.flops
+                    for k, v in inner.coll.items():
+                        c.coll[k] = c.coll.get(k, 0.0) + v
+    return c
+
+
+def _comp_cost(name: str, comps, memo) -> Costs:
+    if name in memo:
+        return memo[name]
+    memo[name] = Costs()  # cycle guard
+    if name not in comps:
+        return memo[name]
+    ops, syms = comps[name]
+    total = Costs()
+    for op in ops:
+        total += _op_cost(op, syms, comps, memo)
+    memo[name] = total
+    return total
+
+
+def analyze_hlo(text: str, entry: Optional[str] = None) -> Costs:
+    comps = parse_module(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    return _comp_cost(entry, comps, {})

@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must precede all other imports (jax locks device count at first init).
+
+"""§Perf hillclimb driver: re-lower a cell with a config variant and print
+baseline-vs-variant roofline terms side by side.
+
+  PYTHONPATH=src python -m repro.launch.perf_iter \
+      --arch arctic-480b --shape prefill_32k --set moe_impl=gather
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def parse_overrides(pairs):
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "true"):
+            v = True
+        if v in ("False", "false"):
+            v = False
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi)
+    mesh_name = "2x16x16" if args.multi else "16x16"
+    rows = []
+    if not args.skip_baseline:
+        rows.append(("baseline", run_cell(args.arch, args.shape, mesh,
+                                          mesh_name)))
+    ov = parse_overrides(args.set)
+    rows.append((str(ov), run_cell(args.arch, args.shape, mesh, mesh_name,
+                                   cfg_overrides=ov)))
+    print(f"\n{'variant':40s} {'tc':>10s} {'tm':>10s} {'tl':>10s} "
+          f"{'bottleneck':>11s} {'useful':>7s} {'mem GB':>7s}")
+    for name, r in rows:
+        print(f"{name:40s} {r['t_compute']:10.3e} {r['t_memory']:10.3e} "
+              f"{r['t_collective']:10.3e} {r['bottleneck']:>11s} "
+              f"{r['useful_ratio']:7.3f} {r['arg_gb']+r['temp_gb']:7.1f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([dict(variant=n, **r) for n, r in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

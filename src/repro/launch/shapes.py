@@ -1,0 +1,109 @@
+"""Assigned input shapes x applicability + ShapeDtypeStruct builders.
+
+LM transformer shapes are seq_len x global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a seq_len-deep KV cache), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention and is
+skipped (with a reason) for pure full-attention architectures —
+DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_mod
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# decoder-side cross-attention source length used for enc-dec decode cells
+ENCDEC_DECODE_SRC = 4096
+
+
+def applicability(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("full quadratic attention (no SWA/SSM path) — 500k decode "
+                "excluded per assignment; see DESIGN.md")
+    return None
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.batch, shape.seq
+    if shape.kind in ("train", "prefill"):
+        S_txt = S - (cfg.frontend_len if cfg.frontend and not cfg.enc_layers
+                     else 0)
+        batch = {
+            "tokens": sds((B, S_txt), jnp.int32),
+            "labels": sds((B, S_txt), jnp.int32),
+        }
+        if cfg.frontend and cfg.enc_layers == 0:
+            batch["frontend"] = sds((B, cfg.frontend_len, cfg.frontend_dim),
+                                    jnp.float32)
+        if cfg.enc_layers:
+            batch["src"] = sds((B, S, cfg.frontend_dim or cfg.d_model),
+                               jnp.float32)
+        if shape.kind == "prefill":
+            del batch["labels"]
+        return batch
+    # decode: one token + caches
+    src_len = ENCDEC_DECODE_SRC if cfg.enc_layers else 0
+    caches = jax.eval_shape(
+        lambda: model_mod.init_cache(cfg, B, S, src_len=src_len))
+    return {
+        "token": sds((B, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "caches": caches,
+    }
+
+
+def make_step_fn(cfg: ModelConfig, shape: ShapeSpec, tcfg=None):
+    """The function each cell lowers: train_step / prefill_step / serve_step."""
+    if shape.kind == "train":
+        from repro.train.trainer import TrainConfig, make_train_step
+
+        tcfg = tcfg or TrainConfig()
+        inner = make_train_step(cfg, tcfg, mesh="explicit")
+
+        def train_step(params, opt_state, ef, batch):
+            return inner(params, opt_state, ef, batch)
+
+        return train_step
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            hidden, _, _, caches = model_mod.forward_hidden(
+                params, cfg, batch, remat=False, collect_kv=True)
+            W = (params["embed"].T if cfg.tie_embeddings
+                 else params["lm_head"]).astype(hidden.dtype)
+            logits = (hidden[:, -1, :] @ W).astype(jnp.float32)
+            return logits, caches
+
+        return prefill_step
+
+    def serve_step(params, caches, token, pos):
+        return model_mod.decode_step(params, cfg, caches, token, pos)
+
+    return serve_step

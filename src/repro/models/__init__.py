@@ -1,0 +1,8 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (init_params, loss_fn, forward_hidden,
+                                decode_step, init_cache, prefill,
+                                param_count, vocab_padded)
+
+__all__ = ["ModelConfig", "init_params", "loss_fn", "forward_hidden",
+           "decode_step", "init_cache", "prefill", "param_count",
+           "vocab_padded"]

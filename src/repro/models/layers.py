@@ -1,0 +1,486 @@
+"""Composable JAX layers shared by all assigned architectures.
+
+Everything is a pure function over explicit param pytrees (no flax):
+  * rmsnorm / rope
+  * blockwise attention — online-softmax over KV blocks so no [S, S]
+    score tensor is ever materialized (required for the 32k prefill and
+    4k train shapes at production batch sizes); GQA, sliding windows,
+    gemma-style softcap and qwen-style qk-norm are all folded in.
+  * decode attention against a (rolling or full) KV cache.
+  * MLP: swiglu / gelu.
+  * MoE with GShard-style grouped capacity dispatch (einsum one-hots) —
+    compiles to dense MXU work + EP/TP collectives, no ragged ops.
+  * Mamba1 selective scan, chunked + rematerialized, with exact
+    single-step recurrence for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# norms / rope / embeddings
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6, plus_one=False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _qkv(x, p, cfg: ModelConfig):
+    """x [B,S,d] -> q [B,S,H,hd], k/v [B,S,KV,hd] (pre-rope)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def constrain(x, *names):
+    """Best-effort sharding constraint against the ambient abstract mesh.
+
+    ``names`` per dim: 'batch' -> the data-parallel axes present in the
+    mesh, 'model' -> the tensor-parallel axis, None -> unconstrained.
+    A dim is only constrained when its size divides the axis size.  Without
+    an ambient mesh (unit tests, single device) this is a no-op.
+
+    Why it exists: GSPMD occasionally drops the batch sharding when
+    propagating into while-loop bodies (observed on the blockwise-attention
+    q-block loop: the body ran with the full batch replicated per device,
+    16x attention flops).  Pinning q/k/v and the output is cheap insurance.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or not mesh.shape:
+        return x
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    import numpy as _np
+
+    def axis_for(name, dim):
+        if name == "batch" and dp:
+            size = int(_np.prod([mesh.shape[a] for a in dp]))
+            if dim % size == 0 and dim >= size:
+                return dp if len(dp) > 1 else dp[0]
+            # try single axes
+            for a in dp:
+                if dim % mesh.shape[a] == 0 and dim >= mesh.shape[a]:
+                    return a
+        if name == "model" and "model" in mesh.shape:
+            if dim % mesh.shape["model"] == 0 and dim >= mesh.shape["model"]:
+                return "model"
+        return None
+
+    spec = jax.sharding.PartitionSpec(
+        *[axis_for(n, d) if n else None for n, d in zip(names, x.shape)])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def repeat_kv(k, rep: int):
+    """[B,S,KV,hd] -> [B,S,KV*rep,hd].  Keeps a FLAT head dim so GSPMD can
+    shard attention over 'model' whenever H divides the axis — reshaping
+    into (KV, rep) factors instead makes the dim unshardable and silently
+    replicates all attention compute across the model axis (16x waste)."""
+    if rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, rep, hd)
+                            ).reshape(B, S, KV * rep, hd)
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, cfg: ModelConfig, kind,
+                        q_block: int = 512, kv_block: int = 1024):
+    """Online-softmax attention; never materializes [Sq, Sk] globally.
+
+    q [B,Sq,H,hd]; k/v [B,Sk,KV,hd]; kind: 0 global-causal, 1 windowed.
+    Each kv block step is rematerialized (flash-style backward): only the
+    (m, l, acc) carries are saved, the [qb, cb] score block is recomputed.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    k = repeat_kv(k, H // KV)
+    v = repeat_kv(v, H // KV)
+    scale = 1.0 / np.sqrt(hd)
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0
+    nq, nk = Sq // q_block, Sk // kv_block
+    qr = constrain(q.reshape(B, nq, q_block, H, hd),
+                   "batch", None, None, "model", None)
+    kr = constrain(k.reshape(B, nk, kv_block, H, hd),
+                   "batch", None, None, "model", None)
+    vr = constrain(v.reshape(B, nk, kv_block, H, hd),
+                   "batch", None, None, "model", None)
+    qp = q_pos.reshape(nq, q_block)
+    kp = k_pos.reshape(nk, kv_block)
+    win = cfg.window or (1 << 30)
+
+    def q_step(qi):
+        qb = constrain(qr[:, qi], "batch", None, "model", None)
+        qpb = qp[qi]
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = constrain(kr[:, ki], "batch", None, "model", None)
+            vb = constrain(vr[:, ki], "batch", None, "model", None)
+            s = jnp.einsum("bqnh,bcnh->bnqc", qb, kb).astype(jnp.float32)
+            s = constrain(s, "batch", "model", None, None)
+            s = softcap(s * scale, cfg.attn_softcap)
+            causal = kp[ki][None, :] <= qpb[:, None]          # [qb, cb]
+            inwin = (qpb[:, None] - kp[ki][None, :]) < win
+            mask = causal & jnp.where(kind == 1, inwin, True)
+            mask = mask | (kind == 2)   # kind 2: bidirectional (encoder)
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p_.sum(-1)
+            pv = jnp.einsum("bnqc,bcnh->bnqh", p_.astype(vb.dtype), vb)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, hd), q.dtype)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        out = out.transpose(0, 2, 1, 3).reshape(B, q_block, H * hd)
+        return constrain(out, "batch", None, "model")
+
+    out = jax.lax.map(q_step, jnp.arange(nq))         # [nq,B,qb,H*hd]
+    out = constrain(out, None, "batch", None, "model")
+    return out.transpose(1, 0, 2, 3).reshape(B, Sq, H * hd)
+
+
+def attention_train(x, p, cfg: ModelConfig, kind, positions=None,
+                    return_kv: bool = False):
+    """Full-sequence attention for train/prefill.  x [B,S,d] -> [B,S,d]."""
+    B, S, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(S)
+    q, k, v = _qkv(x, p, cfg)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, pos, pos, cfg, kind)
+    out = jnp.einsum("bsx,xd->bsd", o, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(x, p, cfg: ModelConfig, kind, cache_k, cache_v,
+                     cache_pos, pos):
+    """Single-token decode.  x [B,1,d]; caches [B,C,KV,hd]; pos scalar.
+
+    Rolling-buffer semantics: the new K/V lands at slot pos % C; masking is
+    by absolute positions stored in ``cache_pos`` [B, C] (-1 = empty).
+    Works for full caches (C = max_len) and windowed caches (C = window).
+    """
+    B, C = cache_k.shape[0], cache_k.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = H // KV
+    q, k, v = _qkv(x, p, cfg)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    slot = pos % C
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    cache_pos = jax.lax.dynamic_update_slice(
+        cache_pos, jnp.full((B, 1), pos, jnp.int32), (0, slot))
+
+    qh = q.reshape(B, KV, rep, hd)
+    s = jnp.einsum("bkrh,bckh->bkrc", qh, cache_k).astype(jnp.float32)
+    s = softcap(s / np.sqrt(hd), cfg.attn_softcap)
+    win = cfg.window or (1 << 30)
+    valid = (cache_pos >= 0) & (cache_pos <= pos)
+    valid &= jnp.where(kind == 1, (pos - cache_pos) < win, True)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrc,bckh->bkrh", w.astype(cache_v.dtype), cache_v)
+    o = o.reshape(B, 1, H * hd)
+    out = jnp.einsum("bsx,xd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v, cache_pos
+
+
+def cross_attention(x, p, cfg: ModelConfig, enc_k, enc_v):
+    """Decoder->encoder attention (blockwise, unmasked); enc_k/enc_v
+    [B,Ss,KV,hd] precomputed once per generation."""
+    B, S, _ = x.shape
+    Ss = enc_k.shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(x.dtype))
+    o = blockwise_attention(q, enc_k, enc_v, jnp.arange(S), jnp.arange(Ss),
+                            cfg, jnp.int32(2))
+    return jnp.einsum("bsx,xd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def encoder_attention(x, p, cfg: ModelConfig):
+    """Bidirectional self-attention (encoder), blockwise (kind=2)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q, k, v = _qkv(x, p, cfg)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, pos, pos, cfg, jnp.int32(2))
+    return jnp.einsum("bsx,xd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(x, p, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    elif cfg.mlp_type == "geglu":   # gemma2
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["w1"].astype(x.dtype))
+    else:
+        raise ValueError(cfg.mlp_type)
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard grouped capacity dispatch)
+# ---------------------------------------------------------------------------
+
+class MoEOut(NamedTuple):
+    y: jnp.ndarray
+    aux_loss: jnp.ndarray
+
+
+def _expert_compute(xe, p, cfg: ModelConfig):
+    """xe [g,E,C,d] -> ye [g,E,C,d] through each expert's FFN."""
+    w1 = p["w1"].astype(xe.dtype)                           # [E,d,f]
+    w2 = p["w2"].astype(xe.dtype)                           # [E,f,d]
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        w3 = p["w3"].astype(xe.dtype)
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("gecd,edf->gecf", xe, w1))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, w3)
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, w1))
+    return jnp.einsum("gecf,efd->gecd", h, w2)
+
+
+def moe_ffn(x, p, cfg: ModelConfig) -> MoEOut:
+    """x [B,S,d] -> [B,S,d].  Router top-k + capacity-limited dispatch.
+
+    Two dispatch implementations:
+      * ``onehot`` (baseline, GShard-faithful): einsum against one-hot
+        dispatch/combine tensors — pure MXU work, but costs
+        T*E*k*cf*d flops per dispatch (dominates expert compute itself
+        at E=128; see EXPERIMENTS.md §Perf).
+      * ``gather``: scatter slot->token indices, gather token rows into
+        [E, C, d] and gather-combine back — O(slots*d) bytes, ~0 flops.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = min(cfg.moe_group, T)
+    assert T % G == 0, (T, G)
+    ng = T // G
+    C = max(int(np.ceil(G * k * cfg.capacity_factor / E)), 1)
+    xt = x.reshape(ng, G, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    gate_w, gate_i = jax.lax.top_k(logits, k)           # [ng,G,k]
+    gate_w = jax.nn.softmax(gate_w, axis=-1)
+
+    # aux load-balance loss (Switch): E * mean_e(frac_tokens * mean_prob)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tok = jnp.mean(
+        jax.nn.one_hot(gate_i[..., 0], E, dtype=jnp.float32), axis=1)
+    frac_prob = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac_tok * frac_prob, -1))
+
+    # capacity positions over flattened (token, slot) pairs, token-major
+    assign = jax.nn.one_hot(gate_i, E, dtype=jnp.int32)     # [ng,G,k,E]
+    af = assign.reshape(ng, G * k, E)
+    pos = jnp.cumsum(af, axis=1) - af                       # [ng,G*k,E]
+    keep = (pos < C) & (af > 0)
+
+    if cfg.moe_impl == "gather":
+        # slot tables: slot_token[g,e,c] = token index feeding that slot
+        tok_of_slot = jnp.arange(G * k, dtype=jnp.int32) // k   # [G*k]
+        pos_tk = jnp.take_along_axis(
+            pos, gate_i.reshape(ng, G * k)[..., None], axis=-1)[..., 0]
+        keep_tk = jnp.take_along_axis(
+            keep, gate_i.reshape(ng, G * k)[..., None], axis=-1)[..., 0]
+        e_tk = gate_i.reshape(ng, G * k)
+        g_idx = jnp.broadcast_to(jnp.arange(ng)[:, None], (ng, G * k))
+        slot_token = jnp.zeros((ng, E, C), jnp.int32).at[
+            g_idx, jnp.where(keep_tk, e_tk, 0),
+            jnp.where(keep_tk, pos_tk, C)
+        ].set(jnp.broadcast_to(tok_of_slot, (ng, G * k)), mode="drop")
+        xe = jnp.take_along_axis(
+            xt, slot_token.reshape(ng, E * C)[..., None], axis=1
+        ).reshape(ng, E, C, d)
+        xe = constrain(xe, "batch", "model" if cfg.expert_shard == "ep"
+                       else None, None, None)
+        ye = _expert_compute(xe, p, cfg)
+        ye = constrain(ye, "batch", "model" if cfg.expert_shard == "ep"
+                       else None, None, None)
+        # combine: for each (token, slot k) gather its expert output row
+        flat = ye.reshape(ng, E * C, d)
+        idx = jnp.where(keep_tk, e_tk * C + jnp.minimum(pos_tk, C - 1), 0)
+        rows = jnp.take_along_axis(flat, idx[..., None], axis=1)  # [ng,G*k,d]
+        rows = rows * (keep_tk[..., None].astype(rows.dtype))
+        wf = gate_w.reshape(ng, G * k)[..., None].astype(rows.dtype)
+        y = (rows * wf).reshape(ng, G, k, d).sum(2)
+        return MoEOut(y.reshape(B, S, d), aux)
+
+    pos_oh = jax.nn.one_hot(pos, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    disp = pos_oh.reshape(ng, G, k, E, C)                   # one-hot [.. E,C]
+    wf = gate_w.astype(x.dtype)[..., None, None]            # [ng,G,k,1,1]
+    combine = (disp * wf).sum(2)                            # [ng,G,E,C]
+    disp_t = disp.sum(2)                                    # [ng,G,E,C]
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp_t, xt)           # dispatch
+    ye = _expert_compute(xe, p, cfg)
+    # NOTE (§Perf, refuted hypothesis): constraining ye to reduce-scatter
+    # over d made the mixtral train cell WORSE (tl 64.7 -> 76.4 s) — the
+    # d-sharded combine output then fights the sequence-parallel residual
+    # sharding and GSPMD inserts an extra per-layer reshard.  Left as-is.
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine)           # combine
+    return MoEOut(y.reshape(B, S, d), aux)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective SSM)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b, ssm_conv: int):
+    """Depthwise causal conv over S.  x [B,S,di]; w [di,k]; b [di]."""
+    k = ssm_conv
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, j:j + x.shape[1]] * w[:, j].astype(x.dtype)
+            for j in range(k))
+    return y + b.astype(x.dtype)
+
+
+def _ssm_inputs(x1, p, cfg: ModelConfig):
+    """x1 [B,S,di] -> dt [B,S,di], Bm/Cm [B,S,state], A [di,state], D [di]."""
+    xdbc = x1 @ p["x_proj"].astype(x1.dtype)   # [B,S,dt_rank+2*state]
+    r, st = cfg.dt_rank, cfg.ssm_state
+    dt_in, Bm, Cm = xdbc[..., :r], xdbc[..., r:r + st], xdbc[..., r + st:]
+    dt = jax.nn.softplus(
+        dt_in @ p["dt_proj"].astype(x1.dtype)
+        + p["dt_bias"].astype(x1.dtype))       # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di,state]
+    return dt, Bm, Cm, A, p["D"].astype(jnp.float32)
+
+
+def _ssm_step(h, x_t, dt_t, B_t, C_t, A):
+    """One recurrence step.  h [B,di,state]."""
+    da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * A)           # [B,di,st]
+    dbx = (dt_t[..., None] * B_t[:, None, :]).astype(jnp.float32) \
+        * x_t.astype(jnp.float32)[..., None]
+    h = da * h + dbx
+    y = jnp.sum(h * C_t.astype(jnp.float32)[:, None, :], axis=-1)   # [B,di]
+    return h, y
+
+
+def mamba_scan(x1, dt, Bm, Cm, A, D, h0, chunk: int):
+    """Chunked + rematerialized selective scan.  x1 [B,S,di] -> y, h."""
+    B, S, di = x1.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def chunk_fn(h, inp):
+        xc, dtc, bc, cc = inp  # [chunk,B,...]
+
+        def step(h, t):
+            x_t, dt_t, B_t, C_t = t
+            h, y = _ssm_step(h, x_t, dt_t, B_t, C_t, A)
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, (xc, dtc, bc, cc))
+        return h, ys
+
+    # time-major chunks: [nc, chunk, B, ...]
+    def tm(a):
+        return a.transpose(1, 0, 2).reshape(nc, chunk, B, a.shape[-1])
+
+    h, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0,
+                         (tm(x1), tm(dt), tm(Bm), tm(Cm)))
+    y = ys.reshape(S, B, di).transpose(1, 0, 2)
+    y = y + D[None, None, :] * x1.astype(jnp.float32)
+    return y, h
+
+
+def mamba_block(x, p, cfg: ModelConfig, h0=None, conv_buf=None,
+                decode: bool = False):
+    """Mamba1 block.  Train: x [B,S,d].  Decode: x [B,1,d] + carried state.
+
+    Returns (y, h, conv_buf) — h/conv_buf are None in train mode unless
+    initial state is provided.
+    """
+    B = x.shape[0]
+    di, st = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(x.dtype)      # [B,S,2*di]
+    x1, z = xz[..., :di], xz[..., di:]
+
+    if not decode:
+        x1 = jax.nn.silu(_causal_conv(x1, p["conv_w"], p["conv_b"],
+                                      cfg.ssm_conv))
+        dt, Bm, Cm, A, D = _ssm_inputs(x1, p, cfg)
+        h0 = (jnp.zeros((B, di, st), jnp.float32) if h0 is None else h0)
+        y, h = mamba_scan(x1, dt, Bm, Cm, A, D, h0, cfg.ssm_chunk)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        out = y @ p["out_proj"].astype(x.dtype)
+        return out, h, None
+
+    # decode: conv_buf [B, k-1, di] carries the last k-1 pre-conv inputs
+    k = cfg.ssm_conv
+    window = jnp.concatenate([conv_buf, x1], axis=1)       # [B,k,di]
+    xc = sum(window[:, j] * p["conv_w"][:, j].astype(x.dtype)
+             for j in range(k)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)[:, None, :]                       # [B,1,di]
+    dt, Bm, Cm, A, D = _ssm_inputs(xc, p, cfg)
+    h, y = _ssm_step(h0, xc[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0], A)
+    y = y + D[None, :] * xc[:, 0].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, h, window[:, 1:]

@@ -1,0 +1,564 @@
+"""Model assembly: param init, train forward, chunked loss, decode.
+
+Conventions:
+  * params are a nested dict pytree; per-layer leaves are stacked [L, ...]
+    and consumed by ``lax.scan`` (keeps HLO size O(1) in depth — critical
+    for 512-device SPMD compiles).
+  * train/prefill use full-sequence layers; decode uses a Python-unrolled
+    layer loop with per-layer caches (cache shapes differ per layer kind —
+    windowed vs global vs SSM — so stacking would waste memory).
+  * the LM head loss is computed in token chunks (never materializes the
+    [B, S, V] logits tensor).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return int(np.ceil(cfg.vocab / 512)) * 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(cfg: ModelConfig, key, n_layers, out_scale):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _norm_init(ks[0], (n_layers, d, H, hd)),
+        "wk": _norm_init(ks[1], (n_layers, d, KV, hd)),
+        "wv": _norm_init(ks[2], (n_layers, d, KV, hd)),
+        "wo": _norm_init(ks[3], (n_layers, H * hd, d), scale=out_scale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n_layers, hd), jnp.float32)
+        p["k_norm"] = jnp.ones((n_layers, hd), jnp.float32)
+    return p
+
+
+def _mlp_params(cfg: ModelConfig, key, n_layers, out_scale, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": _norm_init(ks[0], (n_layers, d, ff)),
+        "w2": _norm_init(ks[1], (n_layers, ff, d), scale=out_scale),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w3"] = _norm_init(ks[2], (n_layers, d, ff))
+    return p
+
+
+def _moe_params(cfg: ModelConfig, key, n_layers, out_scale):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.eff_moe_d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _norm_init(ks[0], (n_layers, d, E)),
+        "w1": _norm_init(ks[1], (n_layers, E, d, f)),
+        "w2": _norm_init(ks[2], (n_layers, E, f, d), scale=out_scale),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w3"] = _norm_init(ks[3], (n_layers, E, d, f))
+    return p
+
+
+def _mamba_params(cfg: ModelConfig, key, n_layers, out_scale):
+    d, di, st, r, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.dt_rank, cfg.ssm_conv)
+    ks = jax.random.split(key, 5)
+    A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": _norm_init(ks[0], (n_layers, d, 2 * di)),
+        "conv_w": _norm_init(ks[1], (n_layers, di, k), scale=0.1),
+        "conv_b": jnp.zeros((n_layers, di), jnp.float32),
+        "x_proj": _norm_init(ks[2], (n_layers, di, r + 2 * st)),
+        "dt_proj": _norm_init(ks[3], (n_layers, r, di)),
+        "dt_bias": jnp.full((n_layers, di), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.tile(jnp.log(A)[None], (n_layers, 1, 1)),
+        "D": jnp.ones((n_layers, di), jnp.float32),
+        "out_proj": _norm_init(ks[4], (n_layers, di, d), scale=out_scale),
+    }
+
+
+def _layer_params(cfg: ModelConfig, key, n_layers, decoder=False):
+    out_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"ln1": jnp.ones((n_layers, cfg.d_model), jnp.float32),
+                         "ln2": jnp.ones((n_layers, cfg.d_model), jnp.float32)}
+    if cfg.sandwich_norm:
+        p["ln1_post"] = jnp.ones((n_layers, cfg.d_model), jnp.float32)
+        p["ln2_post"] = jnp.ones((n_layers, cfg.d_model), jnp.float32)
+    fam = cfg.family
+    if fam == "ssm":
+        p["ssm"] = _mamba_params(cfg, ks[0], n_layers, out_scale)
+        del p["ln2"]  # single-branch block
+        return p
+    p["attn"] = _attn_params(cfg, ks[0], n_layers, out_scale)
+    if fam == "hybrid":
+        p["ssm"] = _mamba_params(cfg, ks[1], n_layers, out_scale)
+    if fam == "moe":
+        p["moe"] = _moe_params(cfg, ks[2], n_layers, out_scale)
+        if cfg.dense_residual:
+            p["mlp"] = _mlp_params(cfg, ks[3], n_layers, out_scale)
+    else:
+        p["mlp"] = _mlp_params(cfg, ks[3], n_layers, out_scale)
+    if decoder:
+        p["xattn"] = _attn_params(cfg, ks[4], n_layers, out_scale)
+        p["ln_x"] = jnp.ones((n_layers, cfg.d_model), jnp.float32)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    Vp = vocab_padded(cfg)
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": _norm_init(ks[0], (Vp, cfg.d_model)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": _layer_params(cfg, ks[1], cfg.n_layers,
+                                decoder=cfg.enc_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _norm_init(ks[2], (cfg.d_model, Vp))
+    if cfg.enc_layers:
+        enc_cfg = cfg  # same dims for encoder stack
+        params["encoder"] = _layer_params(enc_cfg, ks[3], cfg.enc_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.frontend:
+        params["frontend_proj"] = _norm_init(
+            ks[4], (cfg.frontend_dim, cfg.d_model))
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (scanned over stacked params)
+# ---------------------------------------------------------------------------
+
+def _decoder_layer(x, p, cfg: ModelConfig, kind, enc_out=None,
+                   collect_kv: bool = False):
+    """One transformer block (any family except pure ssm encoder).
+
+    Returns (x, aux, ys) — ys is the per-layer serving cache content
+    (K/V and/or SSM state) when ``collect_kv``, else None.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    ys = {}
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps, plus_one=cfg.sandwich_norm)
+    if cfg.family == "hybrid":
+        a, kv = L.attention_train(h, p["attn"], cfg, kind, return_kv=True)
+        s, hs, _ = L.mamba_block(h, p["ssm"], cfg)
+        o = 0.5 * (a + s)
+        if collect_kv:
+            ys = {"k": kv[0], "v": kv[1], "h": hs}
+    else:
+        o, kv = L.attention_train(h, p["attn"], cfg, kind, return_kv=True)
+        if collect_kv:
+            ys = {"k": kv[0], "v": kv[1]}
+    if cfg.sandwich_norm:
+        o = L.rmsnorm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+    x = x + o
+    if enc_out is not None:
+        hx = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        ek = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                        p["xattn"]["wk"].astype(enc_out.dtype))
+        ev = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                        p["xattn"]["wv"].astype(enc_out.dtype))
+        x = x + L.cross_attention(hx, p["xattn"], cfg, ek, ev)
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps, plus_one=cfg.sandwich_norm)
+    if cfg.family == "moe":
+        mo = L.moe_ffn(h, p["moe"], cfg)
+        o, aux = mo.y, mo.aux_loss
+        if cfg.dense_residual:
+            o = o + L.mlp(h, p["mlp"], cfg)
+    else:
+        o = L.mlp(h, p["mlp"], cfg)
+    if cfg.sandwich_norm:
+        o = L.rmsnorm(o, p["ln2_post"], cfg.norm_eps, plus_one=True)
+    return x + o, aux, (ys if collect_kv else None)
+
+
+def _ssm_layer(x, p, cfg: ModelConfig, collect_kv: bool = False):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    o, hs, _ = L.mamba_block(h, p["ssm"], cfg)
+    ys = {"h": hs} if collect_kv else None
+    return x + o, jnp.zeros((), jnp.float32), ys
+
+
+def _encoder_layer(x, p, cfg: ModelConfig):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.encoder_attention(h, p["attn"], cfg)
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp(h, p["mlp"], cfg), jnp.zeros((), jnp.float32), None
+
+
+_PARAM_DIM_TAGS = {
+    # per-layer (unstacked) param dims -> ('batch' = FSDP axes, 'model' = TP)
+    "wq": ("batch", "model", None), "wk": ("batch", "model", None),
+    "wv": ("batch", "model", None), "wo": ("model", "batch"),
+    "w1": ("batch", "model"), "w3": ("batch", "model"),
+    "w2": ("model", "batch"),
+    "router": ("batch", None),
+    "in_proj": ("batch", "model"), "conv_w": ("model", None),
+    "conv_b": ("model",), "x_proj": ("model", None),
+    "dt_proj": (None, "model"), "dt_bias": ("model",),
+    "A_log": ("model", None), "D": ("model",),
+    "out_proj": ("model", "batch"),
+}
+
+
+def _constrain_layer_slice(p, cfg: ModelConfig):
+    """Pin shardings of one layer's param slice (and, because
+    with_sharding_constraint transposes to itself, of its GRADIENT).
+
+    Without this the backward scan accumulates per-layer grads into fully
+    replicated [L, ...] buffers (GSPMD drops the sharding through the
+    in-loop dynamic-update-slice) — 16x grad memory + traffic.
+    """
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        name = names[-1]
+        tags = _PARAM_DIM_TAGS.get(name)
+        if name in ("w1", "w2", "w3") and leaf.ndim == 3:   # MoE [E, d, f]
+            if cfg.expert_shard == "ep":
+                tags = ("model", "batch", None)
+            else:
+                tags = ((None, "batch", "model") if name != "w2"
+                        else (None, "model", "batch"))
+        if tags is None or len(tags) != leaf.ndim:
+            return leaf
+        return L.constrain(leaf, *tags)
+
+    return jax.tree_util.tree_map_with_path(rule, p)
+
+
+def _stack(x, stacked_params, cfg: ModelConfig, body, remat: bool):
+    """scan the layer body over stacked params (+ per-layer kind).
+
+    ``body(x, p, kind) -> (x', aux, ys)``; ys (or None) is collected
+    across layers as stacked [L, ...] arrays (serving caches).
+    """
+    kinds = jnp.asarray(cfg.layer_kinds(), jnp.int32)
+    n = kinds.shape[0]
+
+    def step(carry, xs):
+        p, kind = xs
+        p = _constrain_layer_slice(p, cfg)
+        x, aux = carry
+        # Megatron-style sequence parallelism: the residual stream between
+        # blocks is sharded over the 'model' axis on the sequence dim, so
+        # the per-layer remat residual is 1/TP the size (GSPMD inserts the
+        # all-gather at qkv/mlp entry and the reduce-scatter at exit).
+        x = L.constrain(x, "batch", "model", None)
+        fn = jax.checkpoint(body) if remat else body
+        y, a, ys = fn(x, p, kind)
+        y = L.constrain(y, "batch", "model", None)
+        return (y, aux + a), ys
+
+    (x, aux), ys = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                (stacked_params, kinds), length=n)
+    return x, aux, ys
+
+
+# ---------------------------------------------------------------------------
+# train forward + loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"].astype(_cdtype(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def forward_hidden(params, cfg: ModelConfig, batch, remat: bool = True,
+                   collect_kv: bool = False):
+    """Run the backbone.
+
+    Returns (hidden [B,S,d], aux_loss, loss_mask, caches) — ``caches`` is
+    the stacked per-layer K/V (+SSM state) when ``collect_kv`` (used by the
+    serving prefill path), else None.
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    loss_mask = jnp.ones(tokens.shape, bool)
+    if cfg.frontend and cfg.enc_layers == 0:  # VLM: patch prefix on decoder
+        front = batch["frontend"].astype(x.dtype)  # [B,P,frontend_dim]
+        fx = front @ params["frontend_proj"].astype(x.dtype)
+        x = jnp.concatenate([fx, x], axis=1)
+        loss_mask = jnp.concatenate(
+            [jnp.zeros(fx.shape[:2], bool), loss_mask], axis=1)
+
+    enc_out = None
+    if cfg.enc_layers:
+        src = batch["src"].astype(x.dtype)          # [B,Ss,frontend_dim]|emb
+        if "frontend_proj" in params:
+            src = src @ params["frontend_proj"].astype(x.dtype)
+        e, _, _ = _stack(src, params["encoder"], cfg,
+                         lambda h, p, k: _encoder_layer(h, p, cfg), remat)
+        enc_out = L.rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+
+    if cfg.family == "ssm":
+        body = lambda h, p, k: _ssm_layer(h, p, cfg, collect_kv)  # noqa: E731
+    else:
+        body = lambda h, p, k: _decoder_layer(  # noqa: E731
+            h, p, cfg, k, enc_out, collect_kv)
+    # Cast the stacked params to compute dtype *outside* the scan: casting
+    # inside the body makes the backward scan accumulate per-layer grads
+    # into full UNSHARDED f32 buffers (GSPMD loses the param sharding
+    # through the in-loop convert) — observed as ~3.6 GB/device/buffer on
+    # the 16x16 mesh.  bf16 grads re-shard correctly and AdamW upcasts.
+    cd = _cdtype(cfg)
+    stacked = jax.tree.map(lambda w: w.astype(cd), params["layers"])
+    x, aux, caches = _stack(x, stacked, cfg, body, remat)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, loss_mask, caches
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, hidden, labels, loss_mask,
+                    chunk: int = 4096):
+    """Cross-entropy without materializing [B,S,V] logits.
+
+    ``labels`` aligns with the *text* positions (the tail of the sequence
+    when a modality prefix is present).
+    """
+    Vp = vocab_padded(cfg)
+    W = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(_cdtype(cfg))
+    B, S_all, d = hidden.shape
+    S_txt = labels.shape[1]
+    h = hidden[:, S_all - S_txt:, :]
+    mask = loss_mask[:, S_all - S_txt:]
+    T = B * S_txt
+    hf = h.reshape(T, d)
+    lf = labels.reshape(T)
+    mf = mask.reshape(T)
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    ncol = jnp.arange(Vp) >= cfg.vocab  # mask padded vocab columns
+
+    def step(carry, xs):
+        hs, ls, ms = xs
+        # keep the token dim sharded over DP inside the loop (GSPMD loses
+        # it through the reshape otherwise -> 16x logits traffic)
+        hs = L.constrain(hs, "batch", None)
+        logits = (hs @ W).astype(jnp.float32)
+        logits = L.constrain(logits, "batch", "model")
+        logits = L.softcap(logits, cfg.logit_softcap)
+        logits = jnp.where(ncol[None, :], -1e30, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[:, None], axis=-1)[:, 0]
+        nll = (lse - gold) * ms
+        loss, cnt = carry
+        return (loss + nll.sum(), cnt + ms.sum()), None
+
+    xs = (hf.reshape(-1, chunk, d), lf.reshape(-1, chunk),
+          mf.reshape(-1, chunk).astype(jnp.float32))
+    (loss, cnt), _ = jax.lax.scan(
+        jax.checkpoint(step), (jnp.zeros((), jnp.float32),
+                               jnp.zeros((), jnp.float32)), xs)
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = True,
+            aux_weight: float = 0.01):
+    hidden, aux, loss_mask, _ = forward_hidden(params, cfg, batch, remat)
+    ce = chunked_ce_loss(params, cfg, hidden, batch["labels"], loss_mask)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _take_layer(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int,
+               src_len: int = 0) -> list:
+    """Per-layer cache list; shapes depend on the layer kind."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    kinds = cfg.layer_kinds() if cfg.family != "ssm" else [0] * cfg.n_layers
+    dt = _cdtype(cfg)
+    caches = []
+    for i in range(cfg.n_layers):
+        c: Dict[str, Any] = {}
+        if cfg.family in ("ssm", "hybrid"):
+            c["h"] = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+            c["conv"] = jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), dt)
+        if cfg.family != "ssm":
+            C = cache_len
+            if kinds[i] == 1 and cfg.window:
+                C = min(cache_len, cfg.window)
+            c["k"] = jnp.zeros((B, C, KV, hd), dt)
+            c["v"] = jnp.zeros((B, C, KV, hd), dt)
+            c["pos"] = jnp.full((B, C), -1, jnp.int32)
+        if cfg.enc_layers:
+            c["ek"] = jnp.zeros((B, src_len, KV, hd), dt)
+            c["ev"] = jnp.zeros((B, src_len, KV, hd), dt)
+        caches.append(c)
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """One-token decode.  token [B,1] int32; pos scalar int32.
+
+    Returns (logits [B, vocab_padded], new_caches).
+    """
+    x = embed_tokens(params, cfg, token)
+    kinds = cfg.layer_kinds() if cfg.family != "ssm" else [0] * cfg.n_layers
+    new_caches = []
+    for i in range(cfg.n_layers):
+        p = _take_layer(params["layers"], i)
+        c = dict(caches[i])
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps, plus_one=cfg.sandwich_norm)
+        if cfg.family == "ssm":
+            o, c["h"], c["conv"] = L.mamba_block(
+                h, p["ssm"], cfg, h0=c["h"], conv_buf=c["conv"], decode=True)
+            x = x + o
+            new_caches.append(c)
+            continue
+        if cfg.family == "hybrid":
+            a, c["k"], c["v"], c["pos"] = L.attention_decode(
+                h, p["attn"], cfg, kinds[i], c["k"], c["v"], c["pos"], pos)
+            s, c["h"], c["conv"] = L.mamba_block(
+                h, p["ssm"], cfg, h0=c["h"], conv_buf=c["conv"], decode=True)
+            o = 0.5 * (a + s)
+        else:
+            o, c["k"], c["v"], c["pos"] = L.attention_decode(
+                h, p["attn"], cfg, kinds[i], c["k"], c["v"], c["pos"], pos)
+        if cfg.sandwich_norm:
+            o = L.rmsnorm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+        x = x + o
+        if cfg.enc_layers:
+            hx = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+            x = x + L.cross_attention(hx, p["xattn"], cfg, c["ek"], c["ev"])
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps, plus_one=cfg.sandwich_norm)
+        if cfg.family == "moe":
+            mo = L.moe_ffn(h, p["moe"], cfg)
+            o = mo.y
+            if cfg.dense_residual:
+                o = o + L.mlp(h, p["mlp"], cfg)
+        else:
+            o = L.mlp(h, p["mlp"], cfg)
+        if cfg.sandwich_norm:
+            o = L.rmsnorm(o, p["ln2_post"], cfg.norm_eps, plus_one=True)
+        x = x + o
+        new_caches.append(c)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    W = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(x.dtype)
+    logits = (x[:, 0, :] @ W).astype(jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
+            frontend=None, src=None):
+    """Fill caches by running the train-style forward and extracting K/V.
+
+    Simple reference implementation used by the serving example: runs
+    attention layers one by one (unrolled) so each layer's K/V can be
+    written into its cache.
+    """
+    B, S = tokens.shape
+    caches = init_cache(cfg, B, cache_len,
+                        src_len=src.shape[1] if src is not None else 0)
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.frontend and frontend is not None:
+        fx = frontend.astype(x.dtype) @ params["frontend_proj"].astype(x.dtype)
+        x = jnp.concatenate([fx, x], axis=1)
+    enc_out = None
+    if cfg.enc_layers and src is not None:
+        src_x = src.astype(x.dtype)
+        if "frontend_proj" in params:
+            src_x = src_x @ params["frontend_proj"].astype(x.dtype)
+        e, _, _ = _stack(src_x, params["encoder"], cfg,
+                         lambda h, p, k: _encoder_layer(h, p, cfg), False)
+        enc_out = L.rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+    S_all = x.shape[1]
+    pos = jnp.arange(S_all)
+    kinds = cfg.layer_kinds() if cfg.family != "ssm" else [0] * cfg.n_layers
+    for i in range(cfg.n_layers):
+        p = _take_layer(params["layers"], i)
+        c = caches[i]
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps, plus_one=cfg.sandwich_norm)
+        if cfg.family in ("ssm", "hybrid"):
+            hs = h
+            xz = hs @ p["ssm"]["in_proj"].astype(x.dtype)
+            x1 = xz[..., :cfg.d_inner]
+            conv_in = jax.nn.silu(L._causal_conv(
+                x1, p["ssm"]["conv_w"], p["ssm"]["conv_b"], cfg.ssm_conv))
+            dt, Bm, Cm, A, D = L._ssm_inputs(conv_in, p["ssm"], cfg)
+            y, hfin = L.mamba_scan(conv_in, dt, Bm, Cm, A, D,
+                                   jnp.zeros((B, cfg.d_inner, cfg.ssm_state),
+                                             jnp.float32), cfg.ssm_chunk)
+            y = y.astype(x.dtype) * jax.nn.silu(xz[..., cfg.d_inner:])
+            s_out = y @ p["ssm"]["out_proj"].astype(x.dtype)
+            c["h"] = hfin
+            c["conv"] = x1[:, S_all - (cfg.ssm_conv - 1):, :]
+        if cfg.family == "ssm":
+            x = x + s_out
+            continue
+        # attention with cache write
+        q, kk, vv = L._qkv(h, p["attn"], cfg)
+        q = L.rope(q, pos, cfg.rope_theta)
+        kk = L.rope(kk, pos, cfg.rope_theta)
+        o = L.blockwise_attention(q, kk, vv, pos, pos, cfg, kinds[i])
+        o = jnp.einsum("bsx,xd->bsd", o, p["attn"]["wo"].astype(x.dtype))
+        Ci = c["k"].shape[1]
+        take = min(Ci, S_all)
+        c["k"] = c["k"].at[:, :take].set(kk[:, S_all - take:])
+        c["v"] = c["v"].at[:, :take].set(vv[:, S_all - take:])
+        c["pos"] = c["pos"].at[:, :take].set(pos[None, S_all - take:])
+        if cfg.family == "hybrid":
+            o = 0.5 * (o + s_out)
+        if cfg.sandwich_norm:
+            o = L.rmsnorm(o, p["ln1_post"], cfg.norm_eps, plus_one=True)
+        x = x + o
+        if cfg.enc_layers and enc_out is not None:
+            ek = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                            p["xattn"]["wk"].astype(x.dtype))
+            ev = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                            p["xattn"]["wv"].astype(x.dtype))
+            c["ek"], c["ev"] = ek, ev
+            hx = L.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+            x = x + L.cross_attention(hx, p["xattn"], cfg, ek, ev)
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps, plus_one=cfg.sandwich_norm)
+        if cfg.family == "moe":
+            mo = L.moe_ffn(h, p["moe"], cfg)
+            o = mo.y + (L.mlp(h, p["mlp"], cfg) if cfg.dense_residual else 0)
+        else:
+            o = L.mlp(h, p["mlp"], cfg)
+        if cfg.sandwich_norm:
+            o = L.rmsnorm(o, p["ln2_post"], cfg.norm_eps, plus_one=True)
+        x = x + o
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    W = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(x.dtype)
+    logits = (x[:, -1, :] @ W).astype(jnp.float32)
+    return L.softcap(logits, cfg.logit_softcap), caches

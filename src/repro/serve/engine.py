@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + jit'd decode with KV caches.
+
+A deliberately small continuous-batching core: requests join a fixed-size
+batch slot, prefill fills their caches, and a single jit'd ``decode_step``
+advances every active slot one token per tick.  greedy/temperature
+sampling; EOS or length frees the slot.
+
+This is the serving counterpart exercised by the ``decode_*`` dry-run
+shapes (one new token against a seq_len-deep cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_mod
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # [S] int32
+    max_new: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, batch: int, cache_len: int,
+                 eos: int = -1):
+        self.cfg, self.params = cfg, params
+        self.B, self.C, self.eos = batch, cache_len, eos
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model_mod.decode_step(p, cfg, c, t, pos))
+
+    def generate(self, requests: List[Request], greedy: bool = True,
+                 seed: int = 0) -> List[np.ndarray]:
+        """Serve a batch of requests (padded to engine batch)."""
+        cfg = self.cfg
+        assert len(requests) <= self.B
+        S = max(len(r.prompt) for r in requests)
+        toks = np.zeros((self.B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        logits, caches = model_mod.prefill(
+            self.params, cfg, jnp.asarray(toks), self.C)
+        max_new = max(r.max_new for r in requests)
+        outs = [[] for _ in requests]
+        rng = np.random.default_rng(seed)
+        cur = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        for i in range(len(requests)):
+            outs[i].append(int(cur[i]))
+        pos = S
+        for t in range(max_new - 1):
+            tok = jnp.asarray(cur[:, None])
+            logits, caches = self._decode(self.params, caches, tok,
+                                          jnp.int32(pos))
+            if greedy:
+                cur = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+            else:
+                p = np.asarray(jax.nn.softmax(logits, -1))
+                cur = np.array([rng.choice(p.shape[1], p=p[i])
+                                for i in range(p.shape[0])], np.int32)
+            pos += 1
+            for i, r in enumerate(requests):
+                if len(outs[i]) < r.max_new:
+                    outs[i].append(int(cur[i]))
+        return [np.asarray(o, np.int32) for o in outs]

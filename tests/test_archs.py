@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs — plus decode-step consistency."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import (init_params, loss_fn, decode_step, init_cache,
+                          prefill, param_count, vocab_padded)
+
+
+def tiny_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.frontend and cfg.enc_layers == 0:
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_len, cfg.frontend_dim)),
+            jnp.float32)
+    if cfg.enc_layers:
+        batch["src"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.frontend_dim or cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_forward_and_grad(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    assert param_count(params) > 0
+    batch = tiny_batch(cfg)
+
+    loss, metrics = loss_fn(params, cfg, batch, remat=False)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+
+    grads = jax.grad(lambda p: loss_fn(p, cfg, batch, remat=True)[0])(params)
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(1))
+    B, C = 2, 32
+    rng = np.random.default_rng(1)
+    src_len = 8 if cfg.enc_layers else 0
+    caches = init_cache(cfg, B, C, src_len=src_len)
+    if cfg.enc_layers:
+        # populate cross k/v via prefill on a short prompt
+        src = jnp.asarray(rng.standard_normal((B, src_len, cfg.frontend_dim)),
+                          jnp.float32)
+        _, caches = prefill(params, cfg,
+                            jnp.asarray(rng.integers(0, cfg.vocab, (B, 4)),
+                                        jnp.int32), C, src=src)
+        start = 4
+    else:
+        start = 0
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+    logits, caches = decode_step(params, cfg, caches, tok,
+                                 jnp.int32(start))
+    assert logits.shape == (B, vocab_padded(cfg))
+    assert np.all(np.isfinite(np.asarray(logits))), arch
+    # a second step advances without shape churn
+    logits2, _ = decode_step(params, cfg, caches, tok, jnp.int32(start + 1))
+    assert np.all(np.isfinite(np.asarray(logits2))), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mixtral-8x22b",
+                                  "falcon-mamba-7b", "hymba-1.5b"])
+def test_prefill_matches_decode(arch):
+    """Greedy continuation after prefill == token-by-token decode."""
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(2))
+    rng = np.random.default_rng(2)
+    B, S, C = 1, 8, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    lp, caches = prefill(params, cfg, toks, C)
+    # same tokens fed step-by-step
+    caches2 = init_cache(cfg, B, C)
+    for t in range(S):
+        ld, caches2 = decode_step(params, cfg, caches2, toks[:, t:t + 1],
+                                  jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                               rtol=2e-2, atol=2e-2)

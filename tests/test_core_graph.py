@@ -1,0 +1,149 @@
+"""Unit tests: graph substrate, spanning tree, lifting primitives."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import build_graph, grid2d, mesh2d, barabasi_albert, star_hub
+from repro.core.spanning_tree import bfs_dist, build_spanning_tree
+from repro.core import lifting as lf
+
+
+def nx_graph(g):
+    import networkx as nx
+
+    gx = nx.Graph()
+    gx.add_nodes_from(range(g.n))
+    for s, d, w in zip(g.src, g.dst, g.weight):
+        gx.add_edge(int(s), int(d), weight=float(w))
+    return gx
+
+
+def test_build_graph_dedup_and_validate():
+    g = build_graph(4, [0, 1, 0, 2], [1, 2, 1, 3], [1.0, 2.0, 3.0, 1.0])
+    assert g.m == 3  # (0,1) deduped
+    w01 = g.weight[(g.src == 0) & (g.dst == 1)]
+    assert np.isclose(w01, 4.0)  # weights summed
+    with pytest.raises(ValueError):
+        build_graph(3, [0, 1], [0, 2], [1.0, 1.0])  # self loop
+    with pytest.raises(ValueError):
+        build_graph(4, [0, 1], [1, 0], [1.0, 1.0])  # disconnected (node 2,3)
+
+
+def test_bfs_matches_networkx():
+    import networkx as nx
+
+    g = mesh2d(7, 9, seed=0)
+    usrc = jnp.concatenate([jnp.asarray(g.src), jnp.asarray(g.dst)])
+    udst = jnp.concatenate([jnp.asarray(g.dst), jnp.asarray(g.src)])
+    dist = np.asarray(bfs_dist(g.n, usrc, udst, 5))
+    ref = nx.single_source_shortest_path_length(nx_graph(g), 5)
+    for v, d in ref.items():
+        assert dist[v] == d
+
+
+def test_spanning_tree_is_max_weight_tree():
+    import networkx as nx
+
+    for g in [grid2d(8, 8, seed=1), barabasi_albert(120, 3, seed=2)]:
+        tree = build_spanning_tree(g.n, jnp.asarray(g.src), jnp.asarray(g.dst),
+                                   jnp.asarray(g.weight))
+        mask = np.asarray(tree.in_tree)
+        assert mask.sum() == g.n - 1
+        # acyclic + connected via networkx
+        gx = nx.Graph()
+        gx.add_nodes_from(range(g.n))
+        for s, d in zip(g.src[mask], g.dst[mask]):
+            gx.add_edge(int(s), int(d))
+        assert nx.is_tree(gx)
+        # maximum total effective weight vs networkx MST on same weights
+        from repro.core.spanning_tree import bfs_dist, effective_weights
+        deg = np.zeros(g.n, np.int32)
+        np.add.at(deg, g.src, 1)
+        np.add.at(deg, g.dst, 1)
+        root = int(np.argmax(deg))
+        usrc = jnp.concatenate([jnp.asarray(g.src), jnp.asarray(g.dst)])
+        udst = jnp.concatenate([jnp.asarray(g.dst), jnp.asarray(g.src)])
+        rd = bfs_dist(g.n, usrc, udst, root)
+        eff = np.asarray(effective_weights(
+            g.n, jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weight),
+            jnp.asarray(deg), rd))
+        gx2 = nx.Graph()
+        for i, (s, d) in enumerate(zip(g.src, g.dst)):
+            gx2.add_edge(int(s), int(d), weight=float(eff[i]))
+        ref = nx.maximum_spanning_tree(gx2)
+        ref_w = sum(d["weight"] for _, _, d in ref.edges(data=True))
+        ours = float(eff[mask].sum())
+        assert np.isclose(ours, ref_w, rtol=1e-5)
+
+
+def test_parent_depth_consistency():
+    g = mesh2d(6, 6, seed=3)
+    tree = build_spanning_tree(g.n, jnp.asarray(g.src), jnp.asarray(g.dst),
+                               jnp.asarray(g.weight))
+    parent = np.asarray(tree.parent)
+    depth = np.asarray(tree.depth)
+    root = int(tree.root)
+    assert parent[root] == root and depth[root] == 0
+    for v in range(g.n):
+        if v != root:
+            assert depth[v] == depth[parent[v]] + 1
+
+
+def test_lca_and_resistance_vs_networkx():
+    import networkx as nx
+
+    g = barabasi_albert(80, 2, seed=4)
+    tree = build_spanning_tree(g.n, jnp.asarray(g.src), jnp.asarray(g.dst),
+                               jnp.asarray(g.weight))
+    lift = lf.build_lifting(g.n, tree.parent, tree.parent_w, tree.depth)
+    mask = np.asarray(tree.in_tree)
+    gx = nx.Graph()
+    for s, d, w in zip(g.src[mask], g.dst[mask], g.weight[mask]):
+        gx.add_edge(int(s), int(d), r=1.0 / float(w))
+    root = int(tree.root)
+    rng = np.random.default_rng(0)
+    us = rng.integers(0, g.n, 50)
+    vs = rng.integers(0, g.n, 50)
+    lcas = np.asarray(lf.lca(lift, jnp.asarray(us), jnp.asarray(vs)))
+    rt = np.asarray(lf.resistance_distance(
+        lift, jnp.asarray(us), jnp.asarray(vs), jnp.asarray(lcas)))
+    import networkx.algorithms.lowest_common_ancestors as nxl
+    tree_d = nx.bfs_tree(gx, root)
+    pairs = list(zip(us.tolist(), vs.tolist()))
+    ref_lca = dict(nxl.tree_all_pairs_lowest_common_ancestor(
+        tree_d, root=root, pairs=pairs))
+    for (u, v), l_ref in ref_lca.items():
+        i = pairs.index((u, v))
+        assert lcas[i] == l_ref
+        ref_r = nx.shortest_path_length(gx, u, v, weight="r")
+        assert np.isclose(rt[i], ref_r, rtol=1e-5), (u, v)
+
+
+def test_ancestor_signature_distance_check():
+    """match_table(u, v, beta) must equal tree-dist(u,v) <= beta exactly."""
+    import networkx as nx
+
+    g = barabasi_albert(60, 2, seed=5)
+    tree = build_spanning_tree(g.n, jnp.asarray(g.src), jnp.asarray(g.dst),
+                               jnp.asarray(g.weight))
+    c = 8
+    sig = np.asarray(lf.ancestor_signatures(tree.parent, c))
+    mask = np.asarray(tree.in_tree)
+    gx = nx.Graph()
+    gx.add_nodes_from(range(g.n))
+    for s, d in zip(g.src[mask], g.dst[mask]):
+        gx.add_edge(int(s), int(d))
+    dist = dict(nx.all_pairs_shortest_path_length(gx))
+    from repro.core.recovery import match_table
+    rng = np.random.default_rng(1)
+    us = rng.integers(0, g.n, 40)
+    vs = rng.integers(0, g.n, 40)
+    for beta in [0, 1, 3, 8]:
+        got = np.asarray(match_table(
+            jnp.asarray(sig[us]), jnp.asarray(sig[vs]),
+            jnp.full((len(us),), beta)))
+        for i, u in enumerate(us):
+            for j, v in enumerate(vs):
+                want = dist[int(u)][int(v)] <= beta
+                assert got[i, j] == want, (u, v, beta)

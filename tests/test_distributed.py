@@ -1,0 +1,46 @@
+"""Distributed recovery tests — run in a subprocess with 8 host devices
+(XLA locks the device count at first init, and the rest of the suite must
+see a single device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import grid2d, barabasi_albert, star_hub, prepare
+    from repro.core.recovery import recover_serial
+    from repro.core.distributed import recover_mixed, partition_subtasks
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cases = [
+        ("grid", grid2d(15, 15, seed=1), None),
+        ("ba", barabasi_albert(400, 3, seed=3), None),
+        ("star-giant", star_hub(300, extra=250, seed=5), 50),
+    ]
+    for name, g, cutoff in cases:
+        prep = prepare(g, chunk=256)
+        st_serial = recover_serial(prep.problem)
+        st_mixed = recover_mixed(prep, mesh, chunk=256, cutoff=cutoff)
+        assert np.array_equal(st_serial, st_mixed), name
+        shard_of, giants, load = partition_subtasks(
+            prep.subtask_sizes, 8, cutoff=cutoff)
+        if name == "star-giant":
+            assert len(giants) >= 1      # hub subtask went to the inner engine
+    print("DISTRIBUTED-OK")
+""")
+
+
+@pytest.mark.slow
+def test_mixed_distributed_equals_serial():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "DISTRIBUTED-OK" in out.stdout, out.stdout + out.stderr

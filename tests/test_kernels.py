@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+Kernels run in interpret mode (CPU container; TPU is the target)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _rand_problem(rng, K, m, c1, n_seg=5):
+    sig = lambda r: rng.integers(0, 30, size=(r, c1)).astype(np.int32)
+    csu, csv = sig(K), sig(K)
+    esu, esv = sig(m), sig(m)
+    cbeta = rng.integers(-1, c1, size=K).astype(np.int32)
+    cseg = rng.integers(0, n_seg, size=K).astype(np.int32)
+    eseg = rng.integers(0, n_seg, size=m).astype(np.int32)
+    eseg[rng.random(m) < 0.1] = -1  # padding rows
+    return map(jnp.asarray, (csu, csv, cbeta, cseg, esu, esv, eseg))
+
+
+@pytest.mark.parametrize("K,m,c1,tile_m", [
+    (8, 64, 9, 32),
+    (16, 512, 9, 512),
+    (128, 1024, 9, 256),
+    (4, 100, 5, 64),      # non-multiple m -> wrapper pads
+    (32, 96, 13, 32),     # larger c
+])
+def test_similarity_kernel_matches_ref(K, m, c1, tile_m):
+    rng = np.random.default_rng(K * m)
+    csu, csv, cbeta, cseg, esu, esv, eseg = _rand_problem(rng, K, m, c1)
+    got = np.asarray(ops.similarity_mark(csu, csv, cbeta, cseg, esu, esv,
+                                         eseg, tile_m=tile_m))
+    want = np.asarray(ops.similarity_mark_ref(csu, csv, cbeta, cseg,
+                                              esu, esv, eseg))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 10_000), K=st.sampled_from([1, 8, 33]),
+       m=st.sampled_from([32, 200]), c1=st.sampled_from([3, 9]))
+@settings(max_examples=10, deadline=None)
+def test_similarity_kernel_property(seed, K, m, c1):
+    rng = np.random.default_rng(seed)
+    csu, csv, cbeta, cseg, esu, esv, eseg = _rand_problem(rng, K, m, c1)
+    got = np.asarray(ops.similarity_mark(csu, csv, cbeta, cseg, esu, esv,
+                                         eseg, tile_m=32))
+    want = np.asarray(ops.similarity_mark_ref(csu, csv, cbeta, cseg,
+                                              esu, esv, eseg))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_similarity_kernel_agrees_with_recovery_predicate():
+    """Kernel == the engine's strict_similarity_matrix on a real problem."""
+    from repro.core import barabasi_albert, prepare
+    from repro.core.recovery import strict_similarity_matrix
+
+    g = barabasi_albert(200, 3, seed=0)
+    prep = prepare(g, chunk=256)
+    p = prep.problem
+    K = 16
+    csu, csv = p.sig_u[:K], p.sig_v[:K]
+    cbeta, cseg = p.beta[:K], p.seg[:K]
+    got = np.asarray(ops.similarity_mark(csu, csv, cbeta, cseg,
+                                         p.sig_u, p.sig_v, p.seg, tile_m=256))
+    sim = strict_similarity_matrix(csu, csv, cbeta, p.sig_u, p.sig_v)
+    want = np.asarray(jnp.any(sim & (cseg[:, None] == p.seg[None, :]), 0))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("B,S,di,state,blk", [
+    (2, 16, 8, 4, 8),
+    (1, 64, 32, 16, 16),
+    (3, 32, 64, 8, 64),
+])
+def test_ssm_scan_kernel_matches_ref(B, S, di, state, blk):
+    from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
+
+    rng = np.random.default_rng(B * S + di)
+    x1 = jnp.asarray(rng.standard_normal((B, S, di)).astype(np.float32))
+    dt = jnp.asarray(0.1 * rng.random((B, S, di)).astype(np.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, state)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, S, state)).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.standard_normal((di, state))).astype(np.float32))
+    h0 = jnp.asarray(rng.standard_normal((B, di, state)).astype(np.float32))
+    y, hT = ssm_scan(x1, dt, Bm, Cm, A, h0, blk=blk)
+    y_ref, h_ref = ssm_scan_ref(x1, dt, Bm, Cm, A, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssm_scan_kernel_matches_model_layer():
+    """Kernel == the model's chunked scan path (same recurrence)."""
+    from repro.kernels.ssm_scan import ssm_scan
+    from repro.models.layers import mamba_scan
+
+    rng = np.random.default_rng(7)
+    B, S, di, state = 2, 32, 16, 4
+    x1 = jnp.asarray(rng.standard_normal((B, S, di)).astype(np.float32))
+    dt = jnp.asarray(0.1 * rng.random((B, S, di)).astype(np.float32))
+    Bm = jnp.asarray(rng.standard_normal((B, S, state)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, S, state)).astype(np.float32))
+    A = jnp.asarray(-np.abs(rng.standard_normal((di, state))).astype(np.float32))
+    D = jnp.zeros((di,), jnp.float32)
+    h0 = jnp.zeros((B, di, state), jnp.float32)
+    y_k, h_k = ssm_scan(x1, dt, Bm, Cm, A, h0, blk=16)
+    y_m, h_m = mamba_scan(x1, dt, Bm, Cm, A, D, h0, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,L,tile_n,dtype", [
+    (64, 5, 32, np.float32),
+    (256, 9, 256, np.float32),
+    (100, 4, 64, np.float32),   # pad path
+    (128, 7, 32, np.float64),
+])
+def test_spmv_matches_ref(n, L, tile_n, dtype):
+    rng = np.random.default_rng(n * L)
+    idx = jnp.asarray(rng.integers(0, n, size=(n, L)).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal((n, L)).astype(dtype))
+    x = jnp.asarray(rng.standard_normal(n).astype(dtype))
+    got = np.asarray(ops.spmv(idx, val, x, tile_n=tile_n))
+    want = np.asarray(ops.spmv_ref(idx, val, x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_laplacian_equals_scipy():
+    from repro.core import mesh2d
+    from repro.kernels.spmv_ell import to_ell
+
+    g = mesh2d(9, 9, seed=1)
+    idx, val = to_ell(g)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(g.n).astype(np.float32)
+    got = np.asarray(ops.spmv(idx, val, jnp.asarray(x), tile_n=32))
+    want = g.laplacian() @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,50 @@
+"""Cheap structural tests for the dry-run cell definitions (no compiles)."""
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch.shapes import SHAPES, applicability, input_specs
+
+
+def test_40_cells_defined():
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    assert len(cells) == 40
+
+
+def test_long_500k_skips_match_design():
+    runs = {a for a in ARCHS
+            if applicability(get_config(a), SHAPES["long_500k"]) is None}
+    assert runs == {"falcon-mamba-7b", "hymba-1.5b", "mixtral-8x22b"}
+
+
+def test_input_specs_shapes():
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if applicability(cfg, s):
+                continue
+            specs = input_specs(cfg, s)
+            if s.kind in ("train", "prefill"):
+                B, St = specs["tokens"].shape
+                assert B == s.batch
+                if cfg.frontend and cfg.enc_layers == 0:
+                    assert St + cfg.frontend_len == s.seq
+                else:
+                    assert St == s.seq
+                assert specs["tokens"].dtype == jnp.int32
+                if s.kind == "train":
+                    assert specs["labels"].shape == specs["tokens"].shape
+            else:
+                assert specs["token"].shape == (s.batch, 1)
+                assert isinstance(specs["caches"], list)
+                assert len(specs["caches"]) == cfg.n_layers
+
+
+def test_decode_cache_sizes_respect_windows():
+    cfg = get_config("mixtral-8x22b")   # SWA: rolling caches
+    specs = input_specs(cfg, SHAPES["long_500k"])
+    for c in specs["caches"]:
+        assert c["k"].shape[1] <= cfg.window
+    cfg2 = get_config("hymba-1.5b")     # 3 global layers keep full caches
+    specs2 = input_specs(cfg2, SHAPES["long_500k"])
+    lens = sorted({c["k"].shape[1] for c in specs2["caches"]})
+    assert lens == [cfg2.window, SHAPES["long_500k"].seq]

@@ -1,0 +1,64 @@
+"""PCG + sparsifier-quality tests (the paper's downstream metric)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (grid2d, mesh2d, barabasi_albert, pdgrass, fegrass,
+                        pcg_host, pcg_jax, quality_iters)
+
+
+def test_pcg_host_solves():
+    g = grid2d(10, 10, seed=0)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(g.n)
+    b -= b.mean()
+    res = pcg_host(g.laplacian(), b, tol=1e-8, maxiter=5000)
+    assert res.converged
+    L = g.laplacian()
+    assert np.linalg.norm(L @ res.x - b) <= 1e-6 * np.linalg.norm(b)
+
+
+def test_pcg_jax_matches_host():
+    g = mesh2d(7, 7, seed=1)
+    L = g.laplacian().toarray()
+    A = jnp.asarray(L[1:, 1:])
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal(g.n)
+    b -= b.mean()
+    x, it, relres = pcg_jax(A, jnp.asarray(b[1:]), tol=1e-6, maxiter=2000)
+    assert float(relres) <= 1e-6
+    res = pcg_host(g.laplacian(), b, tol=1e-6, maxiter=2000)
+    assert abs(int(it) - res.iters) <= 2  # same algorithm, fp differences
+
+
+def test_preconditioner_reduces_iterations():
+    g = mesh2d(25, 25, seed=2)
+    rng = np.random.default_rng(2)
+    b = rng.standard_normal(g.n)
+    b -= b.mean()
+    base = pcg_host(g.laplacian(), b, tol=1e-3).iters
+    sp = pdgrass(g, alpha=0.05)
+    pre = pcg_host(g.laplacian(), b, sp.laplacian(), tol=1e-3).iters
+    assert pre < base
+
+
+def test_more_alpha_fewer_iters():
+    """Paper: quality improves (iters drop) as alpha grows."""
+    g = mesh2d(22, 22, seed=3)
+    iters = [quality_iters(g, pdgrass(g, alpha=a)) for a in (0.02, 0.10)]
+    assert iters[1] <= iters[0]
+
+
+def test_pcg_jax_with_chol_preconditioner():
+    g = grid2d(9, 9, seed=4)
+    sp = pdgrass(g, alpha=0.10)
+    A = jnp.asarray(g.laplacian().toarray()[1:, 1:])
+    M = np.asarray(sp.laplacian().toarray()[1:, 1:])
+    chol = jnp.asarray(np.linalg.cholesky(M))
+    rng = np.random.default_rng(4)
+    b = rng.standard_normal(g.n - 1)
+    x, it_pre, _ = pcg_jax(A, jnp.asarray(b), chol, tol=1e-5, maxiter=2000)
+    _, it_raw, _ = pcg_jax(A, jnp.asarray(b), None, tol=1e-5, maxiter=2000)
+    assert int(it_pre) < int(it_raw)
+    assert np.allclose(np.asarray(A @ x), b, atol=1e-4 * np.linalg.norm(b))
