@@ -31,6 +31,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, **kw):
+        # the experimental version can't prove replication across while_loop
+        # bodies; the engines are replication-safe by construction.
+        return _exp_shard_map(f, check_rep=False, **kw)
+
 from repro.core import recovery as rec_mod
 from repro.core.recovery import (STATUS_OPEN, STATUS_RECOVERED,
                                  STATUS_SKIPPED, RecoveryProblem,
@@ -137,7 +147,7 @@ def recover_outer(sharded: ShardedProblem, mesh, axis: str = "data",
             stop_at_target=False, chunk=chunk)
         return status[None], stats.rounds[None]
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)))
@@ -160,7 +170,9 @@ def _inner_round_engine(sig_u, sig_v, beta, seg, axis: str,
     m_loc = seg.shape[0]
     c1 = sig_u.shape[1]
     B = block_size
-    n_sh = jax.lax.axis_size(axis)
+    # jax.lax.axis_size only exists on newer jax; psum of 1 is equivalent.
+    n_sh = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
+            else jax.lax.psum(1, axis))
     my = jax.lax.axis_index(axis)
     is_edge = seg >= 0
     status0 = jnp.where(is_edge, STATUS_OPEN, STATUS_SKIPPED).astype(jnp.int8)
@@ -248,7 +260,7 @@ def _inner_round_engine(sig_u, sig_v, beta, seg, axis: str,
 def recover_inner(sig_u, sig_v, beta, seg, mesh, axis: str = "data",
                   block_size: int = 32, chunk: int = 2048):
     """shard_map wrapper for one giant segment sharded over ``axis``."""
-    fn = jax.shard_map(
+    fn = _shard_map(
         functools.partial(_inner_round_engine, axis=axis,
                           block_size=block_size, chunk=chunk),
         mesh=mesh,

@@ -1,0 +1,6 @@
+"""Distributed substrate: gradient compression + parameter sharding specs.
+
+Split out of the trainer so the launch dry-run and the serving stack can
+reuse the same sharding rules without importing training code.
+"""
+from repro.dist import compress, sharding  # noqa: F401

@@ -1,0 +1,61 @@
+"""int8 gradient compression with error feedback (DCN-crossing gradients).
+
+Cross-pod gradient all-reduce rides the DCN, which is ~50x slower per byte
+than ICI — int8 quantization cuts that traffic 4x vs f32.  Plain
+quantization biases training; error feedback (Seide et al. 2014, Karimireddy
+et al. 2019) keeps the *accumulated* compressed gradient unbiased: each step
+adds the previous step's quantization error back in before quantizing, so
+errors telescope instead of compounding.
+
+    g_q, ef = compress_grads(grads, ef)     # tree-structured, jit-safe
+
+The error-feedback state is stored in bfloat16: the residual is at most one
+quantization step, so bf16's 8 mantissa bits lose nothing that matters while
+halving the state's memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    q: jnp.ndarray       # int8 payload
+    scale: jnp.ndarray   # f32 per-tensor max-abs scale
+
+
+def quantize(x: jnp.ndarray) -> Quantized:
+    """Symmetric per-tensor int8: q = round(x / scale * 127)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x / scale * 127.0), -127, 127).astype(jnp.int8)
+    return Quantized(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize(z: Quantized) -> jnp.ndarray:
+    return z.q.astype(jnp.float32) * (z.scale / 127.0)
+
+
+def init_error_feedback(params):
+    """Zero residual state, one bf16 buffer per parameter."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def _compress_one(g, e):
+    total = g.astype(jnp.float32) + e.astype(jnp.float32)
+    y = dequantize(quantize(total))
+    return y, (total - y).astype(jnp.bfloat16)
+
+
+def compress_grads(grads, ef_state):
+    """Quantize-dequantize every gradient leaf with error feedback.
+
+    Returns (compressed f32 gradient tree, new bf16 error tree).  Invariant
+    (tested): sum over steps of compressed grads + final error == sum of
+    true grads, up to bf16 rounding of the residual.
+    """
+    pairs = jax.tree.map(_compress_one, grads, ef_state)
+    outer = jax.tree.structure(grads)
+    inner = jax.tree.structure((0, 0))
+    return jax.tree.transpose(outer, inner, pairs)

@@ -1,0 +1,82 @@
+"""FSDP + tensor-parallel PartitionSpecs for the model parameter tree.
+
+Rules are keyed on parameter *names* (the stacked-layer trees of
+``models/model.py``), with divisibility guards so the same rules work on
+any mesh: a dim is only sharded when its size divides the axis size, and
+falls back to replication otherwise.
+
+Mesh axes (see ``launch/mesh.py``):
+  * 'model'        — tensor parallel (heads / ffn / expert dims),
+  * 'data' (+'pod') — FSDP: parameters sharded over the data axes on their
+    largest remaining dim, all-gathered per layer at use time.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax import tree_util
+from jax.sharding import PartitionSpec as P
+
+# TP over the *last* dim (output-expanding projections).
+_TP_LAST = {"w1", "w3", "router", "in_proj", "x_proj", "lm_head",
+            "frontend_proj"}
+# TP over the head dim [..., d, heads, hd] (QKV projections).
+_TP_HEAD = {"wq", "wk", "wv"}
+# TP over dim -2 (input-contracting projections; output needs a psum).
+_TP_IN = {"wo", "w2", "out_proj", "dt_proj"}
+# MoE tensors carry a leading [layers, experts, ...] pair.
+_MOE = {"w1", "w2", "w3", "router"}
+
+
+def _fsdp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_pspecs(params, mesh, expert_shard: bool = False):
+    """PartitionSpec tree for ``params`` (arrays or ShapeDtypeStructs).
+
+    ``expert_shard=True`` shards MoE expert tensors over 'model' on the
+    expert dim (expert parallel) instead of their ffn dim.
+    """
+    fsdp = _fsdp_axes(mesh)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+    fsdp_spec = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+    tp_size = int(mesh.shape.get("model", 1))
+
+    def rule(path, x):
+        name = str(getattr(path[-1], "key", path[-1]))
+        in_moe = any(str(getattr(k, "key", k)) == "moe" for k in path)
+        dims = [None] * x.ndim
+        if x.ndim < 2:
+            return P()  # norms / biases / scalars: replicate
+
+        # -- tensor parallel dim --------------------------------------------
+        tp_dim = None
+        if tp_size > 1:
+            if in_moe and expert_shard and name in _MOE and x.ndim >= 3:
+                tp_dim = 1                     # [layers, E, ...] expert dim
+            elif name in _TP_HEAD and x.ndim >= 3:
+                tp_dim = x.ndim - 2
+            elif name in _TP_LAST:
+                tp_dim = x.ndim - 1
+            elif name in _TP_IN and x.ndim >= 2:
+                tp_dim = x.ndim - 2
+            elif name == "embed":
+                tp_dim = 0                     # vocab-sharded embedding
+            if tp_dim is not None and x.shape[tp_dim] % tp_size == 0:
+                dims[tp_dim] = "model"
+            else:
+                tp_dim = None
+
+        # -- FSDP dim: largest remaining divisible dim (skip the layer-stack
+        #    leading dim of per-layer tensors so scan slicing stays local) ---
+        if fsdp and fsdp_size > 1:
+            start = 1 if x.ndim >= 3 else 0
+            cands = [d for d in range(start, x.ndim)
+                     if d != tp_dim and x.shape[d] % fsdp_size == 0
+                     and x.shape[d] >= fsdp_size]
+            if cands:
+                best = max(cands, key=lambda d: x.shape[d])
+                dims[best] = fsdp_spec
+        return P(*dims)
+
+    return tree_util.tree_map_with_path(rule, params)

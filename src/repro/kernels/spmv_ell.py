@@ -53,20 +53,25 @@ def spmv_ell(idx, val, x, *, tile_n: int = 256, interpret: bool = True):
 
 
 def to_ell(graph, dtype=jnp.float32):
-    """Host-side: Laplacian of a Graph/edge mask in ELL [n, L] layout."""
+    """Host-side: Laplacian of a Graph/edge mask in ELL [n, L] layout.
+
+    Vectorized scatter (no per-vertex python loop) — this runs once per
+    hierarchy level at solver-setup time, so it must scale to 1e5+ rows.
+    Layout per row v: the -w neighbor entries, then the diagonal (weighted
+    degree), then padding slots that gather the row's own x with val = 0.
+    """
     import numpy as np
 
     n = graph.n
-    deg = np.diff(graph.indptr)
-    L = int(deg.max()) + 1  # +1 for the diagonal
-    idx = np.zeros((n, L), dtype=np.int32)
+    deg = np.diff(graph.indptr).astype(np.int64)
+    L = int(deg.max()) + 1 if n else 1  # +1 for the diagonal
+    rows = np.repeat(np.arange(n), deg)
+    slot = np.arange(deg.sum()) - np.repeat(graph.indptr[:-1], deg)
+    idx = np.broadcast_to(np.arange(n, dtype=np.int32)[:, None], (n, L)).copy()
     val = np.zeros((n, L), dtype=np.float64)
-    for v in range(n):
-        lo, hi = graph.indptr[v], graph.indptr[v + 1]
-        k = hi - lo
-        idx[v, :k] = graph.adj[lo:hi]
-        val[v, :k] = -graph.adj_w[lo:hi]
-        idx[v, k] = v
-        val[v, k] = graph.adj_w[lo:hi].sum()
-        idx[v, k + 1:] = v  # padding gathers the row's own x; val = 0
+    idx[rows, slot] = graph.adj
+    val[rows, slot] = -graph.adj_w.astype(np.float64)
+    wdeg = np.zeros(n, dtype=np.float64)
+    np.add.at(wdeg, rows, graph.adj_w.astype(np.float64))
+    val[np.arange(n), deg] = wdeg
     return jnp.asarray(idx), jnp.asarray(val.astype(np.float32))

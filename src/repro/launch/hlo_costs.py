@@ -141,8 +141,17 @@ def parse_module(text: str):
             continue
         name, rtype, kind, args = m.groups()
         operands, _ = _split_operands(args)
-        opnames = [o.lstrip("%") for o in operands
-                   if o.startswith("%") or re.match(r"^[\w.\-]+$", o)]
+        # Newer XLA prints bare operand names (`dot(%a, %b)`); older XLA
+        # prints the type inline (`dot(f32[128,256]{1,0} %a, ...)`).  Accept
+        # both, and harvest inline types into the symbol table.
+        opnames = []
+        for o in operands:
+            mo = re.match(
+                r"^(?:((?:\w+\[[\d,]*\])(?:\{[\d,]*\})?)\s+)?%?([\w.\-]+)$", o)
+            if mo:
+                opnames.append(mo.group(2))
+                if mo.group(1):
+                    syms.setdefault(mo.group(2), mo.group(1))
         syms[name] = rtype
         ops.append(Op(name=name, kind=kind, result_type=rtype,
                       args_str=args, operands=opnames))

@@ -16,11 +16,21 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: the ``axis_types`` kwarg (and
+    ``jax.sharding.AxisType``) only exist on newer jax; older versions
+    default every axis to auto sharding, which is what we want anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, model_par: int = None):
@@ -29,6 +39,5 @@ def make_mesh_for(n_devices: int, model_par: int = None):
         model_par = min(16, n_devices)
     while n_devices % model_par:
         model_par //= 2
-    return jax.make_mesh(
-        (n_devices // model_par, model_par), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((n_devices // model_par, model_par),
+                            ("data", "model"))

@@ -1,0 +1,28 @@
+"""repro.solver: multilevel sparsifier-preconditioned Laplacian solver service.
+
+The first real *consumer* subsystem of the pdGRASS pipeline.  Four layers:
+
+  * :mod:`repro.solver.hierarchy`  — recursive pdGRASS: sparsify, contract,
+    re-sparsify (SF-GRASS-style) into a multilevel preconditioner chain.
+  * :mod:`repro.solver.device_pcg` — fully jit'd batched-RHS PCG whose matvec
+    routes through the Pallas ELL kernel and whose preconditioner applies the
+    hierarchy via forward/backward tree sweeps (symmetric V-cycle).
+  * :mod:`repro.solver.cache`      — content-hash-keyed sparsifier/hierarchy
+    cache (in-memory LRU + optional on-disk) so repeated solves on the same
+    graph skip pipeline steps 1-4 entirely.
+  * :mod:`repro.solver.service`    — request/response solve engine with
+    slot batching over right-hand sides (the serve/engine.py idiom).
+"""
+from repro.solver.cache import LRUCache, graph_fingerprint
+from repro.solver.device_pcg import (BatchedPCGResult, batched_pcg,
+                                     ell_laplacian, make_matvec, make_solver)
+from repro.solver.hierarchy import Hierarchy, Level, build_hierarchy, subgraph
+from repro.solver.service import SolveRequest, SolveResponse, SolverService
+
+__all__ = [
+    "Hierarchy", "Level", "build_hierarchy", "subgraph",
+    "BatchedPCGResult", "batched_pcg", "ell_laplacian", "make_matvec",
+    "make_solver",
+    "LRUCache", "graph_fingerprint",
+    "SolveRequest", "SolveResponse", "SolverService",
+]

@@ -1,0 +1,116 @@
+"""Content-hash-keyed cache for sparsifiers / hierarchies / ELL slabs.
+
+Building a preconditioner is the expensive part of a Laplacian solve
+(pipeline steps 1-4: spanning tree, lifting, scores, recovery — then the
+multilevel contraction).  Serving traffic hits the *same* graphs over and
+over (same mesh, new right-hand sides), so the solver service keys every
+built artifact by a SHA-256 fingerprint of the graph content plus the build
+parameters and reuses it: a cache hit skips steps 1-4 entirely.
+
+Two tiers:
+  * in-memory LRU (capacity-bounded, per-process),
+  * optional on-disk pickle directory (shared across processes/restarts).
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import os
+import pickle
+import tempfile
+from typing import Any, Callable, Optional, Tuple
+
+from repro.core.graph import Graph
+
+
+def graph_fingerprint(graph: Graph, extra: tuple = ()) -> str:
+    """SHA-256 over the canonical edge arrays + build parameters.
+
+    ``build_graph`` canonicalizes (src < dst, sorted, deduped), so two
+    logically identical graphs hash identically regardless of input edge
+    order.  ``extra`` folds in solver parameters (alpha, precond, ...) so
+    different builds of the same graph get distinct keys.
+    """
+    h = hashlib.sha256()
+    h.update(b"pdgrass-graph-v1")
+    h.update(int(graph.n).to_bytes(8, "little"))
+    h.update(graph.src.tobytes())
+    h.update(graph.dst.tobytes())
+    h.update(graph.weight.tobytes())
+    for item in extra:
+        h.update(repr(item).encode())
+    return h.hexdigest()
+
+
+class LRUCache:
+    """In-memory LRU with an optional on-disk second tier.
+
+    ``get_or_build(key, build)`` returns ``(value, source)`` where source is
+    "mem", "disk", or "miss" (built now).  The builder runs at most once per
+    key per process; disk entries survive restarts.
+    """
+
+    def __init__(self, capacity: int = 16, disk_dir: Optional[str] = None):
+        self.capacity = int(capacity)
+        self.disk_dir = disk_dir
+        self._mem: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
+        self.hits = 0
+        self.disk_hits = 0
+        self.misses = 0
+        self.evictions = 0
+        if disk_dir:
+            os.makedirs(disk_dir, exist_ok=True)
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def _disk_path(self, key: str) -> Optional[str]:
+        return os.path.join(self.disk_dir, f"{key}.pkl") if self.disk_dir \
+            else None
+
+    def _put_mem(self, key: str, value: Any) -> None:
+        self._mem[key] = value
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.evictions += 1
+
+    def get(self, key: str) -> Tuple[Any, str]:
+        """(value, "mem"|"disk") or (None, "miss") without building."""
+        if key in self._mem:
+            self._mem.move_to_end(key)
+            self.hits += 1
+            return self._mem[key], "mem"
+        path = self._disk_path(key)
+        if path and os.path.exists(path):
+            with open(path, "rb") as f:
+                value = pickle.load(f)
+            self.disk_hits += 1
+            self._put_mem(key, value)
+            return value, "disk"
+        return None, "miss"
+
+    def put(self, key: str, value: Any) -> None:
+        self._put_mem(key, value)
+        path = self._disk_path(key)
+        if path:
+            # atomic write: never leave a torn pickle for a reader to load
+            fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(value, f)
+            os.replace(tmp, path)
+
+    def get_or_build(self, key: str, build: Callable[[], Any]) -> Tuple[Any, str]:
+        value, source = self.get(key)
+        if source != "miss":
+            return value, source
+        self.misses += 1
+        value = build()
+        self.put(key, value)
+        return value, "miss"
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "disk_hits": self.disk_hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "size": len(self._mem), "capacity": self.capacity}

@@ -1,0 +1,70 @@
+"""Deterministic stand-in for the `hypothesis` API surface this suite uses.
+
+Activated by conftest.py ONLY when the real hypothesis is not installed
+(hermetic containers); `pip install hypothesis` always wins.  Properties are
+exercised over `max_examples` seeded draws, so the property tests still run
+many concrete cases — they just lose hypothesis's adaptive shrinking.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+class strategies:  # accessed as `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(**named_strategies):
+    def deco(fn):
+        n = getattr(fn, "_stub_settings", {}).get("max_examples", 20)
+
+        # NOTE: no functools.wraps — pytest follows __wrapped__ to the inner
+        # signature and would look for fixtures named after the strategy
+        # kwargs.  The wrapper must present a zero-arg signature.
+        def wrapper():
+            for i in range(n):
+                rng = np.random.default_rng(0xC0FFEE + i)
+                drawn = {k: s.example(rng)
+                         for k, s in named_strategies.items()}
+                fn(**drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

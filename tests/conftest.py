@@ -1,0 +1,18 @@
+"""Suite-wide fixtures/gates.
+
+If `hypothesis` is missing (hermetic container — no network installs), wire
+the deterministic stub in its place BEFORE test modules import it.  The real
+package, when installed, always takes precedence.
+"""
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    _here = os.path.dirname(__file__)
+    spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(_here, "_hypothesis_stub.py"))
+    stub = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(stub)
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = stub.strategies

@@ -15,9 +15,9 @@ SCRIPT = textwrap.dedent("""
     from repro.core import grid2d, barabasi_albert, star_hub, prepare
     from repro.core.recovery import recover_serial
     from repro.core.distributed import recover_mixed, partition_subtasks
+    from repro.launch.mesh import compat_make_mesh
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((8,), ("data",))
     cases = [
         ("grid", grid2d(15, 15, seed=1), None),
         ("ba", barabasi_albert(400, 3, seed=3), None),
