@@ -3,11 +3,15 @@
 improves on that metric."""
 from __future__ import annotations
 
+import argparse
+
 from benchmarks import table2_quality
 
 
-def run():
-    rows = table2_quality.run(scale="small", quality=True)
+def run(quick: bool = False):
+    rows = table2_quality.run(scale="tiny" if quick else "small",
+                              alphas=(0.05,) if quick else (0.02, 0.05, 0.10),
+                              quality=True)
     out = []
     for r in rows:
         out.append({
@@ -18,8 +22,11 @@ def run():
     return out
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick)
     print("graph,alpha,time_ratio_fe_over_pd,iter_ratio_fe_over_pd")
     for r in rows:
         print(f"{r['graph']},{r['alpha']},{r['time_ratio']},{r['iter_ratio']}")

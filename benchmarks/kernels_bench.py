@@ -7,6 +7,8 @@ Shapes sweep the regimes the recovery engine uses.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 import jax
@@ -16,10 +18,13 @@ from benchmarks.common import timeit
 from repro.kernels import ops
 
 
-def run():
+def run(quick: bool = False):
+    shapes = [(16, 4096)] if quick else [(16, 4096), (64, 16384),
+                                         (128, 65536)]
+    spmv_shapes = [(4096, 8)] if quick else [(4096, 8), (65536, 8)]
     rows = []
     rng = np.random.default_rng(0)
-    for K, m in [(16, 4096), (64, 16384), (128, 65536)]:
+    for K, m in shapes:
         c1 = 9
         mk = lambda r: jnp.asarray(   # noqa: E731
             rng.integers(0, 1000, (r, c1)).astype(np.int32))
@@ -37,7 +42,7 @@ def run():
         rows.append((f"similarity_pallas_interp_K{K}_m{m}", t_int * 1e6,
                      "interpret=True"))
 
-    for n, L in [(4096, 8), (65536, 8)]:
+    for n, L in spmv_shapes:
         idx = jnp.asarray(rng.integers(0, n, (n, L)).astype(np.int32))
         val = jnp.asarray(rng.standard_normal((n, L)).astype(np.float32))
         x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
@@ -47,8 +52,11 @@ def run():
     return rows
 
 
-def main():
-    for name, us, derived in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for name, us, derived in run(quick=args.quick):
         print(f"{name},{us:.1f},{derived}")
 
 

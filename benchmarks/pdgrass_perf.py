@@ -7,6 +7,8 @@ in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from benchmarks.common import timeit
@@ -14,17 +16,25 @@ from repro.core import barabasi_albert, mesh2d, prepare
 from repro.core.recovery import recover_rounds, recover_serial
 
 
-def run():
+def run(quick: bool = False):
+    if quick:
+        graphs = [("mesh_uniform", mesh2d(14, 14, seed=1)),
+                  ("ba_skewed", barabasi_albert(300, 3, seed=2))]
+        variants = [(16, 128, "B16_K128_default"),
+                    (16, 128, "B16_K128_stop_at_target")]
+    else:
+        graphs = [("mesh_uniform", mesh2d(60, 60, seed=1)),
+                  ("ba_skewed", barabasi_albert(4000, 3, seed=2))]
+        variants = [(1, 8, "B1_K8_minimal"),
+                    (16, 128, "B16_K128_default"),
+                    (64, 512, "B64_K512_wide"),
+                    (16, 128, "B16_K128_stop_at_target")]
     rows = []
-    for name, g in [("mesh_uniform", mesh2d(60, 60, seed=1)),
-                    ("ba_skewed", barabasi_albert(4000, 3, seed=2))]:
+    for name, g in graphs:
         prep = prepare(g)
         t_serial, ref = timeit(recover_serial, prep.problem, repeat=1)
         rows.append((f"{name}/serial_paper_faithful", t_serial * 1e6, "baseline"))
-        for B, K, tag in [(1, 8, "B1_K8_minimal"),
-                          (16, 128, "B16_K128_default"),
-                          (64, 512, "B64_K512_wide"),
-                          (16, 128, "B16_K128_stop_at_target")]:
+        for B, K, tag in variants:
             stop = tag.endswith("stop_at_target")
 
             def go():
@@ -43,8 +53,11 @@ def run():
     return rows
 
 
-def main():
-    for name, us, derived in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    for name, us, derived in run(quick=args.quick):
         print(f"{name},{us:.1f},{derived}")
 
 

@@ -1,19 +1,23 @@
 """Solver-service benchmark: per-call host PCG vs cached batched device PCG.
 
-Three ways to serve ``L_G x = b`` traffic on the same graph:
+Four ways to serve ``L_G x = b`` traffic on the same graph:
 
-  * ``host``      — the pre-solver-service path: rebuild the pdGRASS
+  * ``host``        — the pre-solver-service path: rebuild the pdGRASS
     sparsifier, factor it (sparse LU), and run scipy PCG — per call.
-  * ``dev``       — device batched PCG (jit'd lax.while_loop, ELL matvec),
+  * ``dev``         — device batched PCG (jit'd lax.while_loop, ELL matvec),
     unpreconditioned, artifacts cached across calls.
-  * ``dev+hier``  — device batched PCG preconditioned by the multilevel
-    hierarchy V-cycle, artifacts cached across calls.
+  * ``dev+hier:pd`` — device batched PCG preconditioned by the multilevel
+    hierarchy built from the **pdGRASS** pipeline config.
+  * ``dev+hier:fe`` — same service, same code path, with the **feGRASS**
+    pipeline config (the paper's Table II baseline) — the two rows differ
+    only by a ``PipelineConfig`` recovery-stage diff.
 
 The device rows pay a one-time cold cost (pipeline steps 1-4 + jit) and
 then amortize it over every subsequent solve on the same graph — the
 serving regime the cache exists for.
 
     PYTHONPATH=src python benchmarks/solver_bench.py [--scale small] [--k 8]
+    PYTHONPATH=src python benchmarks/solver_bench.py --quick
 """
 import argparse
 import os
@@ -27,6 +31,7 @@ from benchmarks.common import timeit  # noqa: E402
 
 from repro.core import barabasi_albert, mesh2d, pdgrass  # noqa: E402
 from repro.core.pcg import pcg_host  # noqa: E402
+from repro.pipeline import fegrass_config, pdgrass_config  # noqa: E402
 from repro.solver import SolverService  # noqa: E402
 
 
@@ -45,16 +50,22 @@ def bench_graph(name, g, k=8, repeat=3):
     # host path: one RHS per call (it has no batching), time per call
     t_host, res_host = timeit(host_solve_per_call, g, B[:, 0], repeat=repeat)
 
+    pd_cfg = pdgrass_config(alpha=0.05, chunk=512)
+    fe_cfg = fegrass_config(alpha=0.05, chunk=512)
+    services = [
+        ("dev", SolverService(pipeline=pd_cfg, precond="none")),
+        ("dev+hier:pd", SolverService(pipeline=pd_cfg, precond="hierarchy")),
+        ("dev+hier:fe", SolverService(pipeline=fe_cfg, precond="hierarchy")),
+    ]
     rows = []
-    for precond in ("none", "hierarchy"):
-        svc = SolverService(alpha=0.05, precond=precond)
+    for tag, svc in services:
         t0 = time.perf_counter()
         cold = svc.solve(g, B)           # build + jit + first solve
         t_cold = time.perf_counter() - t0
         t_warm, warm = timeit(svc.solve, g, B, repeat=repeat)
-        assert warm.cache == "mem" and warm.converged, (name, precond)
+        assert warm.cache == "mem" and warm.converged, (name, tag)
         rows.append({
-            "precond": precond,
+            "tag": tag,
             "cold_s": t_cold,
             "warm_ms_per_rhs": t_warm * 1e3 / k,
             "iters": int(warm.iters.max()),
@@ -66,11 +77,15 @@ def bench_graph(name, g, k=8, repeat=3):
     print(f"  host per-call:        {host_ms:10.1f} ms/rhs   "
           f"iters={res_host.iters}")
     for r in rows:
-        tag = "dev" if r["precond"] == "none" else "dev+hier"
         speedup = host_ms / r["warm_ms_per_rhs"]
-        print(f"  {tag:<10} cold={r['cold_s']:6.1f}s  warm="
+        print(f"  {r['tag']:<12} cold={r['cold_s']:6.1f}s  warm="
               f"{r['warm_ms_per_rhs']:8.2f} ms/rhs   iters={r['iters']:<5d} "
               f"relres={r['relres']:.1e}  speedup_vs_host={speedup:8.1f}x")
+    by_tag = {r["tag"]: r for r in rows}
+    pd_r, fe_r = by_tag["dev+hier:pd"], by_tag["dev+hier:fe"]
+    print(f"  pd-vs-fe (one Pipeline code path): iters {pd_r['iters']} vs "
+          f"{fe_r['iters']}, warm {pd_r['warm_ms_per_rhs']:.2f} vs "
+          f"{fe_r['warm_ms_per_rhs']:.2f} ms/rhs")
     warm_best = min(r["warm_ms_per_rhs"] for r in rows)
     assert warm_best < host_ms, (
         f"{name}: cached device path ({warm_best:.1f} ms/rhs) did not beat "
@@ -78,26 +93,38 @@ def bench_graph(name, g, k=8, repeat=3):
     return host_ms / warm_best
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", default="small", choices=["small", "medium"])
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium"])
     ap.add_argument("--k", type=int, default=8, help="RHS batch width")
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny graphs, k=2 — smoke-test the code path")
+    args = ap.parse_args(argv)
 
-    if args.scale == "small":
+    if args.quick:
+        graphs = {
+            "mesh2d-16x16": mesh2d(16, 16, seed=0),
+            "ba-300": barabasi_albert(300, 3, seed=1),
+        }
+        k, repeat = 2, 1
+    elif args.scale == "small":
         graphs = {
             "mesh2d-40x40": mesh2d(40, 40, seed=0),
             "mesh2d-60x60": mesh2d(60, 60, seed=0),
             "ba-2000": barabasi_albert(2000, 3, seed=1),
         }
+        k, repeat = args.k, 3
     else:
         graphs = {
             "mesh2d-100x100": mesh2d(100, 100, seed=0),
             "mesh2d-160x160": mesh2d(160, 160, seed=0),
             "ba-20000": barabasi_albert(20_000, 3, seed=1),
         }
+        k, repeat = args.k, 3
 
-    speedups = [bench_graph(name, g, k=args.k) for name, g in graphs.items()]
+    speedups = [bench_graph(name, g, k=k, repeat=repeat)
+                for name, g in graphs.items()]
     print(f"\ncached+jit'd device PCG beats the per-call host path on every "
           f"graph (best-path speedups: "
           f"{', '.join(f'{s:.0f}x' for s in speedups)})")

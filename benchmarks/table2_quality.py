@@ -1,25 +1,33 @@
 """Table II analog: recovery runtime + passes + PCG iteration counts.
 
-feGRASS (loose similarity, multi-pass, serial reference) vs pdGRASS
-(strict similarity, single pass, JAX round engine) across the synthetic
-suite at alpha in {0.02, 0.05, 0.10}.  SuiteSparse graphs are not
-available offline; the suite spans the same structural families
-(grids/meshes ~ census+FEM rows, BA/star ~ com-* hub rows, WS/regular ~
-collaboration rows).
+feGRASS (loose similarity, multi-pass) vs pdGRASS (strict similarity,
+single pass, JAX round engine) across the synthetic suite at alpha in
+{0.02, 0.05, 0.10} — both run through the unified ``repro.pipeline``
+harness, so the entire comparison is a recovery-stage config diff (printed
+in the header).  SuiteSparse graphs are not available offline; the suite
+spans the same structural families (grids/meshes ~ census+FEM rows,
+BA/star ~ com-* hub rows, WS/regular ~ collaboration rows).
+
+    PYTHONPATH=src python benchmarks/table2_quality.py [--quick]
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import timeit
-from repro.core import fegrass, pdgrass, prepare, quality_iters, suite
+from repro.core import quality_iters, suite
 from repro.core.pcg import pcg_host
+from repro.pipeline import Pipeline, config_diff, fegrass_config, pdgrass_config
 
 
 def run(scale: str = "small", alphas=(0.02, 0.05, 0.10), quality: bool = True):
     rows = []
     for gname, g in suite(scale).items():
-        prep = prepare(g)   # shared step 1-3 (same tree for both, like paper)
+        # Shared steps 1-3: same tree + score stages for both configs (the
+        # paper's apples-to-apples protocol), prepared once per graph.
+        prep = Pipeline(pdgrass_config()).prepare(g)
         base_iters = None
         if quality:
             rng = np.random.default_rng(0)
@@ -27,9 +35,10 @@ def run(scale: str = "small", alphas=(0.02, 0.05, 0.10), quality: bool = True):
             b -= b.mean()
             base_iters = pcg_host(g.laplacian(), b).iters
         for alpha in alphas:
-            t_fe, fe = timeit(fegrass, g, alpha, prepared=prep, repeat=1)
-            t_pd, pd = timeit(
-                pdgrass, g, alpha, prepared=prep, engine="rounds", repeat=3)
+            fe_pipe = Pipeline(fegrass_config(alpha=alpha))
+            pd_pipe = Pipeline(pdgrass_config(alpha=alpha))
+            t_fe, fe = timeit(fe_pipe.run, g, prepared=prep, repeat=1)
+            t_pd, pd = timeit(pd_pipe.run, g, prepared=prep, repeat=3)
             row = {
                 "graph": gname, "n": g.n, "m": g.m, "alpha": alpha,
                 "T_fe_ms": round(t_fe * 1e3, 2),
@@ -49,8 +58,18 @@ def run(scale: str = "small", alphas=(0.02, 0.05, 0.10), quality: bool = True):
     return rows
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny graphs, one alpha — smoke-test the code path")
+    ap.add_argument("--scale", default=None, choices=["tiny", "small"])
+    args = ap.parse_args(argv)
+    scale = args.scale or ("tiny" if args.quick else "small")
+    alphas = (0.05,) if args.quick else (0.02, 0.05, 0.10)
+
+    diff = config_diff(pdgrass_config(), fegrass_config())
+    print(f"# pdGRASS vs feGRASS config diff: {diff}")
+    rows = run(scale=scale, alphas=alphas)
     keys = list(rows[0].keys())
     print(",".join(keys))
     for r in rows:

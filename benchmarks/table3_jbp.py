@@ -10,18 +10,27 @@ the paper's "false positives") and round counts.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from repro.core import barabasi_albert, star_hub, prepare
 from repro.core.recovery import recover_rounds
 
 
-def run():
+def run(quick: bool = False):
+    if quick:
+        graphs = [("ba_skewed", barabasi_albert(300, 4, seed=1)),
+                  ("star_hub", star_hub(200, extra=150, seed=2))]
+        blocks = [(16, 128)]
+    else:
+        graphs = [("ba_skewed", barabasi_albert(3000, 4, seed=1)),
+                  ("star_hub", star_hub(2000, extra=1500, seed=2))]
+        blocks = [(16, 128), (32, 256)]
     rows = []
-    for name, g in [("ba_skewed", barabasi_albert(3000, 4, seed=1)),
-                    ("star_hub", star_hub(2000, extra=1500, seed=2))]:
+    for name, g in graphs:
         prep = prepare(g)
-        for B, K in [(16, 128), (32, 256)]:
+        for B, K in blocks:
             status, stats = recover_rounds(
                 prep.problem, block_size=B, max_candidates=K,
                 stop_at_target=False)
@@ -39,8 +48,11 @@ def run():
     return rows
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick)
     keys = list(rows[0].keys())
     print(",".join(keys))
     for r in rows:

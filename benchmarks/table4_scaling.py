@@ -14,6 +14,8 @@ gives us (the paper's own analysis model, Section II.D):
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from benchmarks.common import timeit
@@ -38,11 +40,16 @@ def predicted_speedup(sizes: np.ndarray, p: int, cutoff=None) -> float:
     return float(total / max(t_p, 1e-9))
 
 
-def run():
+def run(quick: bool = False):
+    if quick:
+        graphs = [("uniform_mesh", mesh2d(14, 14, seed=1)),
+                  ("skewed_ba", barabasi_albert(300, 4, seed=2))]
+    else:
+        graphs = [("uniform_mesh", mesh2d(70, 70, seed=1)),
+                  ("skewed_ba", barabasi_albert(5000, 4, seed=2)),
+                  ("skewed_star", star_hub(3000, extra=2500, seed=3))]
     rows = []
-    for name, g in [("uniform_mesh", mesh2d(70, 70, seed=1)),
-                    ("skewed_ba", barabasi_albert(5000, 4, seed=2)),
-                    ("skewed_star", star_hub(3000, extra=2500, seed=3))]:
+    for name, g in graphs:
         prep = prepare(g)
         t_serial, _ = timeit(recover_serial, prep.problem, repeat=1)
         t_vec, _ = timeit(
@@ -63,8 +70,11 @@ def run():
     return rows
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick)
     keys = list(rows[0].keys())
     print(",".join(keys))
     for r in rows:

@@ -18,26 +18,36 @@ import numpy as np  # noqa: E402
 
 import jax  # noqa: E402
 
-from repro.core import barabasi_albert, prepare  # noqa: E402
-from repro.core.distributed import partition_subtasks, recover_mixed  # noqa: E402
-from repro.core.recovery import recover_serial  # noqa: E402
+from repro.core import barabasi_albert  # noqa: E402
+from repro.core.distributed import partition_subtasks  # noqa: E402
 from repro.launch.mesh import compat_make_mesh  # noqa: E402
+from repro.pipeline import Pipeline, pdgrass_config  # noqa: E402
 from repro.solver import SolverService  # noqa: E402
 
 
 def main():
     g = barabasi_albert(3000, 4, seed=0)
     print(f"graph: |V|={g.n} |E|={g.m}, devices={jax.device_count()}")
-    prep = prepare(g, chunk=512)
+
+    # the distributed engine is just another recovery stage; the mesh is
+    # runtime context (not config), passed through Pipeline.run
+    dist_pipe = Pipeline(pdgrass_config(alpha=0.05, chunk=512,
+                                        engine="distributed",
+                                        stop_at_target=False))
+    serial_pipe = Pipeline(pdgrass_config(alpha=0.05, chunk=512,
+                                          engine="serial"))
+    prep = dist_pipe.prepare(g)   # shared steps 1-3 for both engines
     mesh = compat_make_mesh((jax.device_count(),), ("data",))
     shard_of, giants, load = partition_subtasks(
         prep.subtask_sizes, jax.device_count())
     print(f"subtasks={prep.n_subtasks} giants={len(giants)} "
           f"outer load per device={load.tolist()}")
-    status = recover_mixed(prep, mesh, chunk=512)
-    ref = recover_serial(prep.problem)
-    assert np.array_equal(status, ref), "distributed != serial!"
-    print(f"recovered={int((status == 1).sum())} — "
+    sp = dist_pipe.run(g, prepared=prep, mesh=mesh)
+    ref = serial_pipe.run(g, prepared=prep)
+    assert np.array_equal(sp.recovered_mask, ref.recovered_mask), \
+        "distributed != serial!"
+    print(f"recovered={sp.stats['n_recovered']} on "
+          f"{sp.stats['n_shards']} shards — "
           f"bit-identical to the serial oracle. OK")
 
     # downstream: serve solves against the sparsified system

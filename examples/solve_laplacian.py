@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core import mesh2d, pdgrass
 from repro.core.pcg import pcg_host
+from repro.pipeline import pdgrass_config
 from repro.solver import SolverService
 
 
@@ -38,7 +39,10 @@ def main():
     B = rng.standard_normal((g.n, args.batch)).astype(np.float32)
     B -= B.mean(axis=0)
 
-    svc = SolverService(alpha=args.alpha, precond="hierarchy")
+    # the service takes the full staged pipeline config — any family member
+    # (swap in fegrass_config for the baseline-preconditioned service)
+    svc = SolverService(pipeline=pdgrass_config(alpha=args.alpha, chunk=512),
+                        precond="hierarchy")
     t0 = time.perf_counter()
     cold = svc.solve(g, B)
     t_cold = time.perf_counter() - t0

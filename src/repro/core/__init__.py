@@ -2,20 +2,26 @@
 
 Public API:
     build_graph / generators      (repro.core.graph)
+    DeviceGraph                   (repro.core.device_graph)  -- device pytree
     prepare, pdgrass, Sparsifier  (repro.core.sparsify)
     fegrass                       (repro.core.fegrass)  -- baseline
     pcg_host, pcg_jax, quality_iters (repro.core.pcg)
+
+The staged, configurable pipeline these entry points wrap lives in
+:mod:`repro.pipeline` (Pipeline / PipelineConfig).
 """
 from repro.core.graph import (Graph, build_graph, grid2d, mesh2d,
                               barabasi_albert, watts_strogatz, random_regular,
                               star_hub, suite)
+from repro.core.device_graph import DeviceGraph
 from repro.core.sparsify import Prepared, Sparsifier, prepare, pdgrass
 from repro.core.fegrass import fegrass
 from repro.core.pcg import pcg_host, pcg_jax, quality_iters
 
 __all__ = [
-    "Graph", "build_graph", "grid2d", "mesh2d", "barabasi_albert",
-    "watts_strogatz", "random_regular", "star_hub", "suite",
+    "Graph", "DeviceGraph", "build_graph", "grid2d", "mesh2d",
+    "barabasi_albert", "watts_strogatz", "random_regular", "star_hub",
+    "suite",
     "Prepared", "Sparsifier", "prepare", "pdgrass", "fegrass",
     "pcg_host", "pcg_jax", "quality_iters",
 ]

@@ -1,0 +1,106 @@
+"""Device-resident companion to the host :class:`repro.core.graph.Graph`.
+
+``Graph`` is numpy + CSR — the right substrate for host-side construction,
+validation and reference algorithms.  :class:`DeviceGraph` is its jax pytree
+twin: flat edge arrays plus the Laplacian diagonal, living on the device,
+registered as a pytree so it flows through ``jit``/``vmap``/``shard_map``
+untouched.  It is what the solver hot path consumes: ``laplacian_matvec``
+is jit-safe scatter-add work, and ``to_ell`` emits the [n, L] ELL slabs the
+Pallas SpMV kernel (``kernels/spmv_ell``) and the V-cycle levels eat —
+no scipy, no host round-trip of edge data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Flat device edge arrays of an undirected weighted graph.
+
+    Attributes:
+      n:      vertex count (static pytree metadata).
+      src/dst: ``[m]`` int32 endpoints, ``src < dst``.
+      weight: ``[m]`` float32 positive edge weights.
+      diag:   ``[n]`` float32 weighted degrees (the Laplacian diagonal).
+    """
+
+    n: int
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    weight: jnp.ndarray
+    diag: jnp.ndarray
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    @classmethod
+    def from_graph(cls, graph, edge_mask: Optional[np.ndarray] = None
+                   ) -> "DeviceGraph":
+        """Upload a host Graph (optionally restricted to ``edge_mask`` edges)."""
+        if edge_mask is not None:
+            keep = np.asarray(edge_mask, dtype=bool)
+            src_h, dst_h, w_h = (graph.src[keep], graph.dst[keep],
+                                 graph.weight[keep])
+        else:
+            src_h, dst_h, w_h = graph.src, graph.dst, graph.weight
+        src = jnp.asarray(src_h, dtype=jnp.int32)
+        dst = jnp.asarray(dst_h, dtype=jnp.int32)
+        weight = jnp.asarray(w_h, dtype=jnp.float32)
+        diag = (jnp.zeros((graph.n,), jnp.float32)
+                .at[src].add(weight).at[dst].add(weight))
+        return cls(n=graph.n, src=src, dst=dst, weight=weight, diag=diag)
+
+    def laplacian_matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """``y = L x`` for ``x`` of shape [n] or [n, k] — jit-safe."""
+        w, d = self.weight, self.diag
+        if x.ndim == 2:
+            w, d = w[:, None], d[:, None]
+        y = d * x
+        y = y.at[self.src].add(-w * x[self.dst])
+        y = y.at[self.dst].add(-w * x[self.src])
+        return y
+
+    def to_ell(self, width: Optional[int] = None):
+        """Laplacian in ELL [n, L] (column-index, value) slab layout.
+
+        Row v holds its ``-w`` neighbor entries, then the diagonal, then
+        padding slots that gather the row's own x with value 0 — the layout
+        of ``kernels/spmv_ell``.  Built with device scatter ops; the only
+        host sync is the slab width ``L`` (a shape, necessarily concrete).
+        """
+        n, m = self.n, self.m
+        if m == 0:
+            L = width or 1
+            idx = jnp.broadcast_to(
+                jnp.arange(n, dtype=jnp.int32)[:, None], (n, L))
+            return idx, jnp.zeros((n, L), self.weight.dtype)
+        heads = jnp.concatenate([self.src, self.dst])
+        tails = jnp.concatenate([self.dst, self.src])
+        ws = jnp.concatenate([self.weight, self.weight])
+        deg = jnp.zeros((n,), jnp.int32).at[heads].add(1)
+        L = int(deg.max()) + 1 if width is None else int(width)
+
+        order = jnp.argsort(heads, stable=True)
+        h, t, v = heads[order], tails[order], ws[order]
+        start = jnp.cumsum(deg) - deg                 # first slot of each row
+        slot = jnp.arange(2 * m, dtype=jnp.int32) - start[h]
+
+        rows = jnp.arange(n, dtype=jnp.int32)
+        idx = jnp.broadcast_to(rows[:, None], (n, L)).at[h, slot].set(t)
+        val = jnp.zeros((n, L), self.weight.dtype).at[h, slot].set(-v)
+        val = val.at[rows, deg].set(self.diag)
+        return idx, val
+
+
+jax.tree_util.register_dataclass(
+    DeviceGraph,
+    data_fields=["src", "dst", "weight", "diag"],
+    meta_fields=["n"],
+)

@@ -1,7 +1,7 @@
 """feGRASS baseline: loose (vertex-cover) similarity, multi-pass recovery.
 
 This is the comparison target of the paper (its Table II).  It shares steps
-1–2 with pdGRASS (same spanning tree, same criticality order — the paper
+1-2 with pdGRASS (same spanning tree, same criticality order — the paper
 does the same for an apples-to-apples recovery comparison) and differs in
 step 4:
 
@@ -12,16 +12,18 @@ step 4:
     with fewer than ``alpha * |V|`` recovered edges, the remaining edges are
     re-scanned in another pass (this is the multi-pass pathology that
     pdGRASS eliminates — thousands of passes on hub-dominated graphs).
+
+In the unified API this is just the ``multipass`` recovery engine
+(:mod:`repro.pipeline.stages`): feGRASS == pdGRASS with a different
+``recovery`` stage config.  :func:`fegrass` below is the back-compat
+wrapper over ``Pipeline(fegrass_config(...))``.
 """
 from __future__ import annotations
-
-import dataclasses
-import math
 
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.core.sparsify import Prepared, Sparsifier, prepare
+from repro.core.sparsify import Prepared, Sparsifier
 
 
 def _tree_csr(graph: Graph, tree_mask: np.ndarray):
@@ -55,18 +57,14 @@ def _bfs_ball(indptr, adj, start: int, beta: int, out: np.ndarray):
         frontier = nxt
 
 
-def fegrass(
-    graph: Graph,
-    alpha: float = 0.02,
-    *,
-    c: int = 8,
-    max_passes: int = 200_000,
-    prepared: Prepared | None = None,
-) -> Sparsifier:
-    """Loose-similarity multi-pass recovery (numpy reference)."""
-    prep = prepared if prepared is not None else prepare(graph, c=c)
-    target = min(int(math.ceil(alpha * graph.n)), prep.m_off)
+def loose_multipass_recover(prep: Prepared, target: int, *, c: int = 8,
+                            max_passes: int = 200_000):
+    """The feGRASS recovery engine: loose-similarity multi-pass (numpy).
 
+    Returns ``(recovered_mask [graph.m] bool, stats)`` — the recovery-engine
+    contract of :mod:`repro.pipeline.stages`.
+    """
+    graph = prep.graph
     tree_mask = np.asarray(prep.tree.in_tree)
     indptr, adj = _tree_csr(graph, tree_mask)
 
@@ -102,11 +100,20 @@ def fegrass(
 
     recovered_mask = np.zeros(graph.m, dtype=bool)
     recovered_mask[eids[np.asarray(recovered, dtype=np.int64)]] = True
-    stats = {
-        "passes": passes,
-        "n_recovered": len(recovered),
-        "target": target,
-        "n_subtasks": prep.n_subtasks,
-    }
-    return Sparsifier(graph=graph, tree_mask=tree_mask,
-                      recovered_mask=recovered_mask, stats=stats)
+    return recovered_mask, {"passes": passes}
+
+
+def fegrass(
+    graph: Graph,
+    alpha: float = 0.02,
+    *,
+    c: int = 8,
+    max_passes: int = 200_000,
+    prepared: Prepared | None = None,
+) -> Sparsifier:
+    """Loose-similarity multi-pass recovery — back-compat wrapper over
+    ``Pipeline(fegrass_config(...))``."""
+    from repro.pipeline import Pipeline, fegrass_config
+
+    cfg = fegrass_config(alpha=alpha, c=c, max_passes=max_passes)
+    return Pipeline(cfg).run(graph, prepared=prepared)

@@ -58,6 +58,23 @@ class Graph:
         v = np.concatenate([-self.weight, -self.weight, deg_w])
         return sp.csr_matrix((v, (i, j)), shape=(self.n, self.n))
 
+    def laplacian_matvec(self, x: np.ndarray) -> np.ndarray:
+        """``y = L x`` in float64 over the CSR arrays — numpy only, no scipy.
+
+        ``x`` may be [n] or [n, k].  Used by the solver's f64 refinement
+        residual checks; graphs here are connected (every row non-empty),
+        which ``np.add.reduceat`` over ``indptr`` relies on.
+        """
+        x = np.asarray(x, dtype=np.float64)
+        w = self.adj_w.astype(np.float64)
+        wdeg = np.add.reduceat(w, self.indptr[:-1])
+        if x.ndim == 2:
+            nbr = np.add.reduceat(w[:, None] * x[self.adj],
+                                  self.indptr[:-1], axis=0)
+            return wdeg[:, None] * x - nbr
+        nbr = np.add.reduceat(w * x[self.adj], self.indptr[:-1])
+        return wdeg * x - nbr
+
 
 def build_graph(n: int, src, dst, weight) -> Graph:
     """Validate + canonicalize an edge list into a :class:`Graph`."""

@@ -155,14 +155,26 @@ def root_tree(n: int, src, dst, weight, in_tree, root) -> TreeResult:
                       depth=depth, root=jnp.asarray(root, jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def build_spanning_tree(n: int, src, dst, weight) -> TreeResult:
-    """Full step 1: degrees -> root -> BFS -> W_eff -> Boruvka -> rooting."""
+@functools.partial(jax.jit, static_argnums=0, static_argnames=("mode",))
+def build_spanning_tree(n: int, src, dst, weight, *,
+                        mode: str = "low_stretch") -> TreeResult:
+    """Full step 1: degrees -> root -> BFS -> W_eff -> Boruvka -> rooting.
+
+    ``mode`` selects the edge order Boruvka maximizes over (the pipeline's
+    ``tree`` stage): ``"low_stretch"`` uses the feGRASS effective weights
+    (Definition 1 — the low-stretch heuristic), ``"boruvka"`` uses the raw
+    weights (a plain maximum spanning tree).
+    """
     deg = (jnp.zeros((n,), jnp.int32).at[src].add(1).at[dst].add(1))
     root = jnp.argmax(deg).astype(jnp.int32)
-    usrc = jnp.concatenate([src, dst])
-    udst = jnp.concatenate([dst, src])
-    rd = bfs_dist(n, usrc, udst, root)
-    eff = effective_weights(n, src, dst, weight, deg, rd)
+    if mode == "low_stretch":
+        usrc = jnp.concatenate([src, dst])
+        udst = jnp.concatenate([dst, src])
+        rd = bfs_dist(n, usrc, udst, root)
+        eff = effective_weights(n, src, dst, weight, deg, rd)
+    elif mode == "boruvka":
+        eff = weight
+    else:
+        raise ValueError(f"unknown tree mode {mode!r}")
     in_tree = boruvka_max_st(n, src, dst, eff)
     return root_tree(n, src, dst, weight, in_tree, root)

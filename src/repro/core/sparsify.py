@@ -1,21 +1,24 @@
-"""End-to-end pdGRASS pipeline: the paper's Algorithm 1 as a public API.
+"""pdGRASS data structures + back-compat entry points.
 
-    sparsifier = pdgrass(graph, alpha=0.05)
+The pipeline orchestration (the paper's Algorithm 1: tree -> lifting ->
+scores -> subtasks -> recovery) lives in :mod:`repro.pipeline`, where each
+step is a named, pluggable stage.  This module keeps
 
-Steps (paper section IV.B):
-  1. resistance distance per off-tree edge (binary lifting, JAX),
-  2. sort off-tree edges by spectral criticality,
-  3. subtasks keyed by LCA (Lemma 6/7: disjoint across LCAs),
-  4. strict-similarity recovery (round engine or serial oracle).
+  * the shared data structures — :class:`Prepared` (steps 1-3 output) and
+    :class:`Sparsifier` (the result, with device-resident Laplacian views),
+  * :func:`prepare` / :func:`pdgrass` — thin wrappers over
+    ``repro.pipeline`` preserving the original loose-kwargs signatures.
+
+    sparsifier = pdgrass(graph, alpha=0.05)      # unchanged
+
+is exactly ``Pipeline(pdgrass_config(alpha=0.05)).run(graph)``.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
+import functools
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lifting as lift_mod
@@ -52,7 +55,27 @@ class Sparsifier:
     def edge_mask(self) -> np.ndarray:
         return self.tree_mask | self.recovered_mask
 
+    @functools.cached_property
+    def device_graph(self):
+        """Device-resident view of the sparsifier (kept edges only).
+
+        Cached: the upload + diagonal build happens once per sparsifier.
+        """
+        from repro.core.device_graph import DeviceGraph
+
+        return DeviceGraph.from_graph(self.graph, edge_mask=self.edge_mask)
+
+    def to_ell(self):
+        """Sparsifier Laplacian as device ELL [n, L] slabs (no scipy) —
+        what ``solver/hierarchy`` levels and the Pallas SpMV kernel consume."""
+        return self.device_graph.to_ell()
+
+    def laplacian_matvec(self, x):
+        """jit-safe ``y = L_P x`` on the device ([n] or [n, k])."""
+        return self.device_graph.laplacian_matvec(x)
+
     def laplacian(self):
+        """Sparsifier Laplacian as scipy CSR (host-side reference path)."""
         import scipy.sparse as sp
 
         g = self.graph
@@ -69,75 +92,12 @@ class Sparsifier:
 
 def prepare(graph: Graph, c: int = 8, chunk: int = 2048,
             score_mode: str = "w_times_r") -> Prepared:
-    """Steps 1–3: tree, lifting, scores, subtask grouping (host+device)."""
-    n, m = graph.n, graph.m
-    src = jnp.asarray(graph.src)
-    dst = jnp.asarray(graph.dst)
-    w = jnp.asarray(graph.weight)
+    """Steps 1-3: tree, lifting, scores, subtask grouping (host+device)."""
+    from repro.pipeline import Pipeline, pdgrass_config
 
-    tree = st_mod.build_spanning_tree(n, src, dst, w)
-    lift = lift_mod.build_lifting(n, tree.parent, tree.parent_w, tree.depth)
-
-    in_tree = np.asarray(tree.in_tree)
-    off_ids = np.flatnonzero(~in_tree)
-    ou = jnp.asarray(graph.src[off_ids])
-    ov = jnp.asarray(graph.dst[off_ids])
-    ow = jnp.asarray(graph.weight[off_ids])
-
-    l = lift_mod.lca(lift, ou, ov)
-    r_t = lift_mod.resistance_distance(lift, ou, ov, l)
-    if score_mode == "w_times_r":
-        score = ow * r_t   # spectral criticality w(e) * R_T(e) (feGRASS)
-    elif score_mode == "r":
-        score = r_t
-    else:
-        raise ValueError(score_mode)
-    depth = lift.depth
-    beta = jnp.minimum(
-        jnp.minimum(depth[ou] - depth[l], depth[ov] - depth[l]), c
-    ).astype(jnp.int32)
-
-    sig = lift_mod.ancestor_signatures(tree.parent, c)
-    sig_u = sig[ou]
-    sig_v = sig[ov]
-
-    # Host-side ordering: LCA ascending, score descending (stable).
-    l_np = np.asarray(l)
-    score_np = np.asarray(score)
-    order = np.lexsort((-score_np, l_np))
-    l_sorted = l_np[order]
-    seg_change = np.concatenate([[True], l_sorted[1:] != l_sorted[:-1]])
-    seg_ids = np.cumsum(seg_change) - 1
-    n_subtasks = int(seg_ids[-1]) + 1 if len(seg_ids) else 0
-    sizes = np.bincount(seg_ids, minlength=max(n_subtasks, 1))
-
-    m_off = off_ids.shape[0]
-    m_pad = max(chunk, int(math.ceil(m_off / chunk)) * chunk)
-    pad = m_pad - m_off
-
-    def pad_rows(x, fill, reorder=True):
-        x = np.asarray(x)
-        if reorder:
-            x = x[order]
-        if pad:
-            shape = (pad,) + x.shape[1:]
-            x = np.concatenate([x, np.full(shape, fill, dtype=x.dtype)])
-        return jnp.asarray(x)
-
-    problem = rec_mod.RecoveryProblem(
-        sig_u=pad_rows(sig_u, -1),
-        sig_v=pad_rows(sig_v, -1),
-        beta=pad_rows(beta, -1),
-        # seg_ids are already in sorted order (built from l_sorted)
-        seg=pad_rows(seg_ids.astype(np.int32), -1, reorder=False),
-        score=pad_rows(score_np, -np.inf),
-    )
-    return Prepared(
-        graph=graph, tree=tree, lift=lift,
-        off_edge_id=off_ids[order],
-        problem=problem, n_subtasks=n_subtasks,
-        subtask_sizes=sizes,
-    )
+    return Pipeline(
+        pdgrass_config(c=c, chunk=chunk, score_mode=score_mode)
+    ).prepare(graph)
 
 
 def pdgrass(
@@ -146,48 +106,23 @@ def pdgrass(
     *,
     c: int = 8,
     engine: str = "rounds",
+    score_mode: str = "w_times_r",
     block_size: int = 16,
     max_candidates: int = 128,
     stop_at_target: bool = True,
     chunk: int = 2048,
     prepared: Optional[Prepared] = None,
 ) -> Sparsifier:
-    """Run the full pdGRASS pipeline and return the sparsifier."""
-    prep = prepared if prepared is not None else prepare(graph, c=c, chunk=chunk)
-    target = int(math.ceil(alpha * graph.n))
-    target = min(target, prep.m_off)
+    """Run the full pdGRASS pipeline and return the sparsifier.
 
-    if engine == "rounds":
-        status, stats = rec_mod.recover_rounds(
-            prep.problem, jnp.int32(target),
-            block_size=block_size, max_candidates=max_candidates,
-            stop_at_target=stop_at_target, chunk=chunk)
-        status = np.asarray(status)
-        stats_d = {
-            "rounds": int(stats.rounds),
-            "candidates": int(stats.candidates),
-            "killed_in_block": int(stats.killed_in_block),
-        }
-    elif engine == "serial":
-        status = rec_mod.recover_serial(prep.problem)
-        stats_d = {"rounds": -1}
-    else:
-        raise ValueError(engine)
+    Back-compat wrapper over :class:`repro.pipeline.Pipeline`; every kwarg
+    maps onto a :class:`repro.pipeline.PipelineConfig` field (``score_mode``
+    included — it is forwarded end to end, see ``ScoreConfig``).
+    """
+    from repro.pipeline import Pipeline, pdgrass_config
 
-    keep = np.asarray(
-        rec_mod.select_top(jnp.asarray(status), prep.problem.score, target))
-    keep = keep[: prep.m_off]
-
-    tree_mask = np.asarray(prep.tree.in_tree)
-    recovered_mask = np.zeros(graph.m, dtype=bool)
-    recovered_mask[prep.off_edge_id[keep]] = True
-
-    stats_d.update(
-        n_recovered=int(recovered_mask.sum()),
-        target=target,
-        n_subtasks=prep.n_subtasks,
-        max_subtask=int(prep.subtask_sizes.max()) if prep.n_subtasks else 0,
-        passes=1,  # pdGRASS always completes in a single pass (paper claim)
-    )
-    return Sparsifier(graph=graph, tree_mask=tree_mask,
-                      recovered_mask=recovered_mask, stats=stats_d)
+    cfg = pdgrass_config(
+        alpha=alpha, c=c, chunk=chunk, engine=engine, score_mode=score_mode,
+        block_size=block_size, max_candidates=max_candidates,
+        stop_at_target=stop_at_target)
+    return Pipeline(cfg).run(graph, prepared=prepared)

@@ -1,0 +1,26 @@
+"""repro.pipeline: the unified staged sparsification API.
+
+One frozen :class:`PipelineConfig` tree describes a sparsifier as three
+named, pluggable stages (tree / score / recovery); :class:`Pipeline` runs
+it.  pdGRASS and feGRASS are both configurations of this harness — see
+:func:`pdgrass_config` / :func:`fegrass_config` and ``config_diff``.
+
+    from repro.pipeline import Pipeline, pdgrass_config
+    sp = Pipeline(pdgrass_config(alpha=0.05)).run(graph)
+
+The legacy entry points ``repro.core.pdgrass`` / ``repro.core.fegrass``
+remain as thin wrappers over this package.
+"""
+from repro.pipeline.api import Pipeline, run_pipeline
+from repro.pipeline.config import (PipelineConfig, RecoveryConfig,
+                                   ScoreConfig, TreeConfig, config_diff,
+                                   fegrass_config, pdgrass_config, validate)
+from repro.pipeline.stages import (RECOVERY_ENGINES, SCORE_STAGES,
+                                   TREE_STAGES, register)
+
+__all__ = [
+    "Pipeline", "run_pipeline",
+    "PipelineConfig", "TreeConfig", "ScoreConfig", "RecoveryConfig",
+    "pdgrass_config", "fegrass_config", "config_diff", "validate",
+    "TREE_STAGES", "SCORE_STAGES", "RECOVERY_ENGINES", "register",
+]

@@ -13,7 +13,8 @@ The first real *consumer* subsystem of the pdGRASS pipeline.  Four layers:
   * :mod:`repro.solver.service`    — request/response solve engine with
     slot batching over right-hand sides (the serve/engine.py idiom).
 """
-from repro.solver.cache import LRUCache, graph_fingerprint
+from repro.solver.cache import (LRUCache, graph_fingerprint,
+                                pipeline_fingerprint)
 from repro.solver.device_pcg import (BatchedPCGResult, batched_pcg,
                                      ell_laplacian, make_matvec, make_solver)
 from repro.solver.hierarchy import Hierarchy, Level, build_hierarchy, subgraph
@@ -23,6 +24,6 @@ __all__ = [
     "Hierarchy", "Level", "build_hierarchy", "subgraph",
     "BatchedPCGResult", "batched_pcg", "ell_laplacian", "make_matvec",
     "make_solver",
-    "LRUCache", "graph_fingerprint",
+    "LRUCache", "graph_fingerprint", "pipeline_fingerprint",
     "SolveRequest", "SolveResponse", "SolverService",
 ]

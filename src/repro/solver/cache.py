@@ -42,6 +42,18 @@ def graph_fingerprint(graph: Graph, extra: tuple = ()) -> str:
     return h.hexdigest()
 
 
+def pipeline_fingerprint(graph: Graph, config, extra: tuple = ()) -> str:
+    """Fingerprint of (graph, PipelineConfig, extras).
+
+    ``config.fingerprint()`` is the canonical JSON serialization of the
+    staged pipeline config, so two services configured with equal config
+    trees share cache entries, and any stage/knob difference (engine,
+    score rule, alpha, ...) gets a distinct key.
+    """
+    return graph_fingerprint(graph,
+                             extra=(config.fingerprint(),) + tuple(extra))
+
+
 class LRUCache:
     """In-memory LRU with an optional on-disk second tier.
 

@@ -26,9 +26,9 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.device_graph import DeviceGraph
 from repro.core.graph import Graph, build_graph
-from repro.core.sparsify import pdgrass
-from repro.kernels.spmv_ell import to_ell
+from repro.pipeline import Pipeline, PipelineConfig, pdgrass_config
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,13 +92,17 @@ def heavy_edge_matching(g: Graph) -> np.ndarray:
     """
     order = np.argsort(-g.weight, kind="stable")
     mate = np.full(g.n, -1, dtype=np.int64)
-    src, dst = g.src, g.dst
-    for e in order:
-        u, v = int(src[e]), int(dst[e])
-        if mate[u] < 0 and mate[v] < 0:
-            mate[u] = v
-            mate[v] = u
-    return mate
+    # The greedy scan is inherently sequential; run it over python ints
+    # (one .tolist() each) rather than per-edge numpy scalar extraction —
+    # ~an order of magnitude less interpreter overhead on 1e5+ edge levels.
+    src_l = g.src[order].tolist()
+    dst_l = g.dst[order].tolist()
+    mate_l = mate.tolist()
+    for u, v in zip(src_l, dst_l):
+        if mate_l[u] < 0 and mate_l[v] < 0:
+            mate_l[u] = v
+            mate_l[v] = u
+    return np.asarray(mate_l, dtype=np.int64)
 
 
 def contract(g: Graph) -> Tuple[np.ndarray, Graph]:
@@ -115,22 +119,28 @@ def contract(g: Graph) -> Tuple[np.ndarray, Graph]:
     """
     mate = heavy_edge_matching(g)
     agg = np.full(g.n, -1, dtype=np.int64)
-    nxt = 0
-    for v in range(g.n):
-        if agg[v] < 0 and mate[v] >= 0:
-            agg[v] = agg[mate[v]] = nxt
-            nxt += 1
-    for v in range(g.n):
-        if agg[v] >= 0:
-            continue
-        lo, hi = g.indptr[v], g.indptr[v + 1]
-        nbrs = g.adj[lo:hi]
-        best = nbrs[np.argmax(g.adj_w[lo:hi])] if hi > lo else None
-        if best is not None and agg[best] >= 0:
-            agg[v] = agg[best]
-        else:  # isolated vertex (cannot happen for connected n>=2)
-            agg[v] = nxt
-            nxt += 1
+    # Matched pairs seed the clusters (vectorized: number the pair's lower
+    # endpoint, mirror onto its mate).
+    verts = np.arange(g.n)
+    lo_end = np.flatnonzero((mate >= 0) & (verts < mate))
+    agg[lo_end] = np.arange(lo_end.shape[0])
+    agg[mate[lo_end]] = np.arange(lo_end.shape[0])
+    nxt = lo_end.shape[0]
+    # Unmatched vertices join their heaviest neighbor's cluster.  Heaviest
+    # neighbor per vertex, vectorized: sort directed slots by (head, -w);
+    # the first slot of each CSR row is then that row's heaviest edge.
+    un = agg < 0
+    if np.any(un):
+        deg = np.diff(g.indptr)
+        heads = np.repeat(verts, deg)
+        slot_order = np.lexsort((-g.adj_w, heads))[::-1]
+        # reversed fancy assignment: the last write per head is its first
+        # (heaviest, CSR-order tie-broken) slot in the forward order
+        best = np.full(g.n, -1, dtype=np.int64)
+        best[heads[slot_order]] = g.adj[slot_order]
+        # maximal matching => every neighbor of an unmatched vertex is
+        # matched, so agg[best[un]] is always >= 0 on connected graphs
+        agg[un] = agg[best[un]]
     cu, cv = agg[g.src], agg[g.dst]
     keep = cu != cv
     coarse = build_graph(nxt, cu[keep], cv[keep], g.weight[keep])
@@ -148,14 +158,19 @@ def _grounded_chol(g: Graph) -> Optional[jnp.ndarray]:
     """Lower Cholesky factor of the grounded (node-0-removed) Laplacian."""
     if g.n < 2:
         return None
-    L = g.laplacian().toarray()[1:, 1:]
-    return jnp.asarray(np.linalg.cholesky(L).astype(np.float32))
+    w = g.weight.astype(np.float64)
+    L = np.zeros((g.n, g.n), dtype=np.float64)
+    np.add.at(L, (g.src, g.dst), -w)
+    np.add.at(L, (g.dst, g.src), -w)
+    L[np.arange(g.n), np.arange(g.n)] = _laplacian_diag(g)
+    return jnp.asarray(np.linalg.cholesky(L[1:, 1:]).astype(np.float32))
 
 
 def build_hierarchy(
     graph: Graph,
     alpha: float = 0.05,
     *,
+    config: Optional[PipelineConfig] = None,
     coarse_n: int = 64,
     max_levels: int = 16,
     chunk: int = 512,
@@ -163,13 +178,18 @@ def build_hierarchy(
 ) -> Hierarchy:
     """Sparsify/contract recursively until the graph fits a dense coarse solve.
 
-    Each level sparsifies with the full pdGRASS pipeline (spanning tree +
-    strict-similarity recovery at density ``alpha``), stores the sparsifier
-    Laplacian in ELL form, then contracts the sparsifier by heavy-edge
-    matching to produce the next level's graph.  Vertex counts shrink by the
-    matching ratio (~2x on meshes) every level, so the chain has O(log n)
-    levels and O(m) total edges.
+    Each level sparsifies through the staged :class:`repro.pipeline.Pipeline`
+    (``config`` if given — any family member works, feGRASS included —
+    else a pdGRASS config from ``alpha``/``chunk``/``pdgrass_kwargs``),
+    stores the sparsifier Laplacian in ELL form via the device-resident
+    ``Sparsifier.to_ell()`` path (no scipy), then contracts the sparsifier
+    by heavy-edge matching to produce the next level's graph.  Vertex counts
+    shrink by the matching ratio (~2x on meshes) every level, so the chain
+    has O(log n) levels and O(m) total edges.
     """
+    if config is None:
+        config = pdgrass_config(alpha=alpha, chunk=chunk, **pdgrass_kwargs)
+    pipe = Pipeline(config)
     levels = []
     g = graph
     for _ in range(max_levels):
@@ -177,21 +197,22 @@ def build_hierarchy(
             break
         m_off = g.m - (g.n - 1)
         if m_off > 0:
-            sp = pdgrass(g, alpha=alpha, chunk=chunk, **pdgrass_kwargs)
+            sp = pipe.run(g)
             sg = subgraph(g, sp.edge_mask)
+            dg = sp.device_graph
         else:
             sg = g  # already a tree — nothing to sparsify away
+            dg = DeviceGraph.from_graph(g)
         agg, coarse = contract(sg)
         if coarse.n >= g.n:  # no progress — stop rather than loop
             break
-        idx, val = to_ell(sg)
+        idx, val = dg.to_ell()
         lev_stats = {
             "n": g.n, "m": g.m, "m_sparsifier": sg.m,
             "n_coarse": coarse.n, "shrink": coarse.n / g.n,
         }
         levels.append(Level(
-            n=g.n, idx=idx, val=val,
-            diag=jnp.asarray(_laplacian_diag(sg).astype(np.float32)),
+            n=g.n, idx=idx, val=val, diag=dg.diag,
             agg=jnp.asarray(agg), n_coarse=coarse.n, stats=lev_stats,
         ))
         g = coarse

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
-from repro.solver.cache import LRUCache, graph_fingerprint
+from repro.pipeline import PipelineConfig, pdgrass_config
+from repro.solver.cache import LRUCache, pipeline_fingerprint
 from repro.solver.device_pcg import (default_matvec_impl, ell_laplacian,
                                      make_solver)
 from repro.solver.hierarchy import build_hierarchy
@@ -62,12 +63,27 @@ def _next_pow2(k: int) -> int:
 class SolverService:
     """Cached, batched sparsifier-preconditioned Laplacian solver."""
 
-    def __init__(self, alpha: float = 0.05, precond: str = "hierarchy",
+    def __init__(self, alpha: Optional[float] = None,
+                 precond: str = "hierarchy",
                  coarse_n: int = 64, cache_capacity: int = 16,
                  disk_dir: Optional[str] = None,
                  matvec_impl: Optional[str] = None, tile_n: int = 256,
-                 max_refine: int = 3):
-        self.alpha = alpha
+                 max_refine: int = 3,
+                 pipeline: Optional[PipelineConfig] = None):
+        """``pipeline`` selects the sparsification pipeline backing the
+        preconditioner (any family member — pdGRASS, feGRASS, custom stage
+        mixes); when omitted, a pdGRASS config is built from ``alpha``
+        (default 0.05).  Passing both is a conflict: alpha lives inside the
+        config."""
+        if pipeline is not None and alpha is not None:
+            raise ValueError(
+                "pass either alpha or pipeline, not both — alpha is "
+                "pipeline.alpha (use pipeline.replace(alpha=...))")
+        self.pipeline = (pipeline if pipeline is not None
+                         else pdgrass_config(
+                             alpha=0.05 if alpha is None else alpha,
+                             chunk=512))
+        self.alpha = self.pipeline.alpha
         self.precond = precond
         self.coarse_n = coarse_n
         self.max_refine = max_refine
@@ -82,13 +98,12 @@ class SolverService:
     # -- artifact plane ------------------------------------------------------
 
     def _key(self, graph: Graph) -> str:
-        return graph_fingerprint(graph, extra=(
-            "solver-v2", self.alpha, self.precond, self.coarse_n))
+        return pipeline_fingerprint(graph, self.pipeline, extra=(
+            "solver-v3", self.precond, self.coarse_n))
 
     def artifacts(self, graph: Graph, key: Optional[str] = None):
-        """(idx, val, hierarchy, L_csr), source — cached pipeline steps 1-4
-        plus the host CSR used by the refinement residual checks (rebuilding
-        it per warm solve would cost O(m) on the hot path).
+        """(idx, val, hierarchy), source — cached pipeline steps 1-4 and the
+        multilevel chain, keyed by (graph content, PipelineConfig, precond).
 
         ``key`` lets callers that already fingerprinted the graph skip the
         second O(m) hash."""
@@ -97,10 +112,10 @@ class SolverService:
 
         def build():
             idx, val = ell_laplacian(graph)
-            hier = (build_hierarchy(graph, alpha=self.alpha,
+            hier = (build_hierarchy(graph, config=self.pipeline,
                                     coarse_n=self.coarse_n)
                     if self.precond == "hierarchy" else None)
-            return idx, val, hier, graph.laplacian()
+            return idx, val, hier
 
         value, source = self.cache.get_or_build(key, build)
         return key, value, source
@@ -111,7 +126,7 @@ class SolverService:
         same capacity (each closure retains device arrays + executables)."""
         fn = self._solvers.get(key)
         if fn is None:
-            idx, val, hier, _ = artifacts
+            idx, val, hier = artifacts
             fn = make_solver(idx, val, hierarchy=hier, precond=self.precond,
                              matvec_impl=self.matvec_impl, tile_n=self.tile_n)
             self._solvers[key] = fn
@@ -193,8 +208,11 @@ class SolverService:
             # The f32 device solve floors around 1e-7 relative residual; ask
             # it only for what it can deliver and let the f64 refinement
             # passes close the rest (each pass multiplies the true residual
-            # by ~inner_tol).
-            inner_tol = max(float(tol_col.min()), 1e-5)
+            # by ~inner_tol).  Per column: a loose-tol request batched with
+            # a strict one stops at its own contract instead of riding along
+            # to the group minimum.
+            inner_tol = jnp.asarray(
+                np.maximum(tol_col, 1e-5).astype(np.float32))
 
             t0 = time.perf_counter()
             res = solve(jnp.asarray(B), tol=inner_tol,
@@ -206,12 +224,13 @@ class SolverService:
             # its attainable-accuracy floor on large/ill-conditioned graphs,
             # so measure the true residual in f64 on the host and re-solve
             # for the correction on the device until tol is genuinely met.
-            L = artifacts[3]
+            # The residual matvec runs over the Graph's own CSR arrays
+            # (numpy f64, no scipy on the solve path).
             B64 = B.astype(np.float64)
             bn = np.maximum(np.linalg.norm(B64, axis=0),
                             np.finfo(np.float64).tiny)
             refinements = 0
-            resid = B64 - L @ x
+            resid = B64 - g.laplacian_matvec(x)
             relres = np.linalg.norm(resid, axis=0) / bn
             while refinements < self.max_refine and np.any(relres > tol_col):
                 rc = resid - resid.mean(axis=0)
@@ -221,7 +240,7 @@ class SolverService:
                              maxiter=jnp.asarray(np.maximum(
                                  maxiter_col - iters, 0)))
                 x_new = x + np.asarray(corr.x, dtype=np.float64)
-                resid_new = B64 - L @ x_new
+                resid_new = B64 - g.laplacian_matvec(x_new)
                 relres_new = np.linalg.norm(resid_new, axis=0) / bn
                 # accept per column whenever the correction improved it ...
                 take = relres_new < relres

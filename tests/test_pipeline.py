@@ -1,0 +1,201 @@
+"""Unified Pipeline API tests: config round-trip + registry validation,
+engine equivalence under one harness, device-resident graph views, and the
+score_mode plumbing regression (pdgrass() used to silently drop it)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DeviceGraph, barabasi_albert, fegrass, mesh2d,
+                        pdgrass, prepare, star_hub)
+from repro.pipeline import (Pipeline, PipelineConfig, RecoveryConfig,
+                            ScoreConfig, config_diff, fegrass_config,
+                            pdgrass_config, run_pipeline)
+
+
+# -- config tree -------------------------------------------------------------
+
+def test_config_roundtrip_identity():
+    for cfg in (PipelineConfig(),
+                pdgrass_config(alpha=0.07, c=6, engine="serial",
+                               score_mode="r", block_size=4),
+                fegrass_config(alpha=0.03, max_passes=17)):
+        d = cfg.to_dict()
+        assert PipelineConfig.from_dict(d) == cfg
+        # canonical serialization is stable and content-keyed
+        assert cfg.fingerprint() == PipelineConfig.from_dict(d).fingerprint()
+    assert (pdgrass_config(alpha=0.05).fingerprint()
+            != fegrass_config(alpha=0.05).fingerprint())
+
+
+def test_config_rejects_unknown_stage_names():
+    with pytest.raises(ValueError, match="unknown recovery stage"):
+        pdgrass_config(engine="nope")
+    with pytest.raises(ValueError, match="unknown score stage"):
+        pdgrass_config(score_mode="nope")
+    with pytest.raises(ValueError, match="unknown tree stage"):
+        pdgrass_config(tree="nope")
+    bad = dataclasses.replace(PipelineConfig(),
+                              recovery=RecoveryConfig(kind="bogus"))
+    with pytest.raises(ValueError, match="unknown recovery stage 'bogus'"):
+        Pipeline(bad)
+
+
+def test_config_from_dict_rejects_unknown_keys():
+    d = PipelineConfig().to_dict()
+    d["typo"] = 1
+    with pytest.raises(ValueError, match="unknown PipelineConfig keys"):
+        PipelineConfig.from_dict(d)
+    d = PipelineConfig().to_dict()
+    d["recovery"]["typo"] = 1
+    with pytest.raises(ValueError, match="unknown RecoveryConfig keys"):
+        PipelineConfig.from_dict(d)
+
+
+def test_config_diff_is_the_fegrass_story():
+    diff = config_diff(pdgrass_config(), fegrass_config())
+    assert diff["recovery.kind"] == ("rounds", "multipass")
+    assert all(k.startswith("recovery.") for k in diff)
+
+
+# -- engine equivalence under one harness ------------------------------------
+
+def test_rounds_and_serial_pipelines_recover_identical_edges():
+    g = barabasi_albert(300, 3, seed=11)
+    shared = Pipeline(pdgrass_config()).prepare(g)
+    a = Pipeline(pdgrass_config(alpha=0.05, engine="serial")).run(
+        g, prepared=shared)
+    b = Pipeline(pdgrass_config(alpha=0.05, engine="rounds",
+                                stop_at_target=False)).run(g, prepared=shared)
+    assert np.array_equal(a.recovered_mask, b.recovered_mask)
+    assert np.array_equal(a.tree_mask, b.tree_mask)
+
+
+def test_fegrass_wrapper_equals_pipeline_config():
+    g = star_hub(200, extra=150, seed=5)
+    via_wrapper = fegrass(g, alpha=0.10)
+    via_pipeline = Pipeline(fegrass_config(alpha=0.10)).run(g)
+    assert np.array_equal(via_wrapper.recovered_mask,
+                          via_pipeline.recovered_mask)
+    assert via_wrapper.stats["passes"] == via_pipeline.stats["passes"] > 1
+
+
+def test_pdgrass_wrapper_equals_pipeline_config():
+    g = mesh2d(14, 14, seed=3)
+    assert np.array_equal(
+        pdgrass(g, alpha=0.05).edge_mask,
+        run_pipeline(g, pdgrass_config(alpha=0.05)).edge_mask)
+
+
+def test_boruvka_tree_stage_differs_from_low_stretch():
+    g = mesh2d(14, 14, seed=7)
+    low = Pipeline(pdgrass_config(alpha=0.05)).run(g)
+    raw = Pipeline(pdgrass_config(alpha=0.05, tree="boruvka")).run(g)
+    assert low.tree_mask.sum() == raw.tree_mask.sum() == g.n - 1
+    assert not np.array_equal(low.tree_mask, raw.tree_mask)
+
+
+def test_pipeline_handles_tree_graph_with_no_offtree_edges():
+    """m_off == 0: no subtasks, no recovery, every engine returns the tree."""
+    from repro.core import build_graph
+
+    n = 48
+    w = np.random.default_rng(0).uniform(1, 10, n - 1)
+    g = build_graph(n, np.arange(n - 1), np.arange(1, n), w)
+    for cfg in (pdgrass_config(alpha=0.1), fegrass_config(alpha=0.1),
+                pdgrass_config(alpha=0.1, engine="serial")):
+        sp = Pipeline(cfg).run(g)
+        assert sp.stats["n_recovered"] == 0
+        assert sp.stats["n_subtasks"] == 0
+        assert sp.tree_mask.all() and not sp.recovered_mask.any()
+
+
+def test_er_sample_score_is_seed_deterministic():
+    g = mesh2d(14, 14, seed=4)
+    mk = lambda s: Pipeline(  # noqa: E731
+        pdgrass_config(alpha=0.10, score_mode="er_sample", seed=s)).run(g)
+    assert np.array_equal(mk(1).recovered_mask, mk(1).recovered_mask)
+    # different seeds draw a different sample (overwhelmingly likely)
+    assert not np.array_equal(mk(1).recovered_mask, mk(2).recovered_mask)
+
+
+# -- score_mode plumbing regression ------------------------------------------
+
+def test_pdgrass_forwards_score_mode_end_to_end():
+    """pdgrass() used to accept prepare()'s score_mode nowhere; now every
+    kwarg maps onto PipelineConfig and reaches the stage."""
+    g = barabasi_albert(250, 3, seed=9)
+    prep_w = prepare(g, score_mode="w_times_r")
+    prep_r = prepare(g, score_mode="r")
+    # the stage really ran: scores differ between modes
+    assert not np.allclose(np.asarray(prep_w.problem.score),
+                           np.asarray(prep_r.problem.score), equal_nan=True)
+    sp_r = pdgrass(g, alpha=0.05, score_mode="r")
+    via_cfg = Pipeline(pdgrass_config(alpha=0.05, score_mode="r")).run(g)
+    assert np.array_equal(sp_r.recovered_mask, via_cfg.recovered_mask)
+
+
+# -- DeviceGraph / device-resident sparsifier views --------------------------
+
+def test_device_graph_matvec_matches_scipy():
+    g = mesh2d(11, 11, seed=2)
+    dg = DeviceGraph.from_graph(g)
+    L = g.laplacian().toarray()
+    rng = np.random.default_rng(0)
+    x1 = rng.standard_normal(g.n).astype(np.float32)
+    xk = rng.standard_normal((g.n, 3)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(dg.laplacian_matvec(jnp.asarray(x1))),
+                               L @ x1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dg.laplacian_matvec(jnp.asarray(xk))),
+                               L @ xk, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dg.diag), np.diag(L), rtol=1e-5)
+
+
+def test_device_graph_matvec_is_jittable():
+    g = mesh2d(9, 9, seed=6)
+    dg = DeviceGraph.from_graph(g)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(g.n)
+                    .astype(np.float32))
+
+    @jax.jit
+    def f(dgraph, v):      # DeviceGraph is a pytree: flows through jit
+        return dgraph.laplacian_matvec(v)
+
+    np.testing.assert_allclose(np.asarray(f(dg, x)),
+                               np.asarray(dg.laplacian_matvec(x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_device_graph_to_ell_matvec_matches_scipy():
+    g = barabasi_albert(200, 3, seed=8)
+    idx, val = DeviceGraph.from_graph(g).to_ell()
+    x = np.random.default_rng(2).standard_normal(g.n).astype(np.float32)
+    y = np.asarray(jnp.einsum("nl,nl->n", val, jnp.asarray(x)[idx]))
+    np.testing.assert_allclose(y, g.laplacian() @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_sparsifier_device_views_match_scipy_on_kept_edges():
+    g = mesh2d(13, 13, seed=5)
+    sp = pdgrass(g, alpha=0.10)
+    L = sp.laplacian().toarray()          # scipy reference over edge_mask
+    x = np.random.default_rng(3).standard_normal(g.n).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(sp.laplacian_matvec(jnp.asarray(x))),
+                               L @ x, rtol=1e-4, atol=1e-4)
+    idx, val = sp.to_ell()
+    y = np.asarray(jnp.einsum("nl,nl->n", val, jnp.asarray(x)[idx]))
+    np.testing.assert_allclose(y, L @ x, rtol=1e-4, atol=1e-4)
+    # the view is cached device-side state, built once
+    assert sp.device_graph is sp.device_graph
+
+
+def test_host_laplacian_matvec_matches_scipy():
+    g = barabasi_albert(150, 3, seed=12)
+    L = g.laplacian()
+    rng = np.random.default_rng(4)
+    x1 = rng.standard_normal(g.n)
+    xk = rng.standard_normal((g.n, 2))
+    np.testing.assert_allclose(g.laplacian_matvec(x1), L @ x1, rtol=1e-12)
+    np.testing.assert_allclose(g.laplacian_matvec(xk), L @ xk, rtol=1e-12)
