@@ -32,6 +32,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="run every section with --quick on tiny graphs")
+    ap.add_argument("--skip", action="append", default=[],
+                    help="section name to skip (repeatable) — e.g. CI runs "
+                         "solver_bench as its own fail-fast step")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig1_summary, kernels_bench, pdgrass_perf,
@@ -49,6 +52,9 @@ def main(argv=None) -> None:
     ]
     section_argv = ["--quick"] if args.smoke else []
     for name, fn in sections:
+        if name in args.skip:
+            print(f"\n=== {name} === (skipped)")
+            continue
         print(f"\n=== {name} ===")
         t0 = time.perf_counter()
         fn(section_argv)

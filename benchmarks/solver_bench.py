@@ -8,13 +8,16 @@ Four ways to serve ``L_G x = b`` traffic on the same graph:
     unpreconditioned, artifacts cached across calls.
   * ``dev+hier:pd`` — device batched PCG preconditioned by the multilevel
     hierarchy built from the **pdGRASS** pipeline config.
-  * ``dev+hier:fe`` — same service, same code path, with the **feGRASS**
-    pipeline config (the paper's Table II baseline) — the two rows differ
-    only by a ``PipelineConfig`` recovery-stage diff.
+  * ``dev+hier:fe`` — the same service, same code path, with the **feGRASS**
+    pipeline config as a *per-request override* — the v2 serving API: one
+    ``SolverService``, two stage mixes, two cached hierarchies.
 
-The device rows pay a one-time cold cost (pipeline steps 1-4 + jit) and
-then amortize it over every subsequent solve on the same graph — the
-serving regime the cache exists for.
+The graph is registered once (``svc.register -> GraphHandle``), so the
+O(m) content hash is paid once per graph per process — not twice per row
+as in the v1 bench.  A final **mixed-config flush** row submits pdGRASS-
+and feGRASS-preconditioned requests for the same mesh in one flush; the
+scheduler splits them into two (graph, config) groups, each cache-hitting
+its own hierarchy.
 
     PYTHONPATH=src python benchmarks/solver_bench.py [--scale small] [--k 8]
     PYTHONPATH=src python benchmarks/solver_bench.py --quick
@@ -32,7 +35,7 @@ from benchmarks.common import timeit  # noqa: E402
 from repro.core import barabasi_albert, mesh2d, pdgrass  # noqa: E402
 from repro.core.pcg import pcg_host  # noqa: E402
 from repro.pipeline import fegrass_config, pdgrass_config  # noqa: E402
-from repro.solver import SolverService  # noqa: E402
+from repro.solver import SolveRequest, SolverService  # noqa: E402
 
 
 def host_solve_per_call(g, b):
@@ -40,6 +43,29 @@ def host_solve_per_call(g, b):
     sp = pdgrass(g, alpha=0.05)
     return pcg_host(g.laplacian(), b.astype(np.float64), sp.laplacian(),
                     tol=1e-5, maxiter=5000)
+
+
+def mixed_config_flush(svc, handle, B, pd_cfg, fe_cfg):
+    """One flush, two PipelineConfigs, same graph: the scheduler must split
+    the batch into per-config groups that each hit their cached hierarchy."""
+    k = B.shape[1]
+    half = max(k // 2, 1)
+    t_pd = svc.submit(SolveRequest(graph=handle, b=B[:, :half]))
+    t_fe = svc.submit(SolveRequest(graph=handle, b=B[:, half:] if k > 1
+                                   else B, pipeline=fe_cfg))
+    groups_before = svc.stats()["scheduler"]["groups"]
+    t0 = time.perf_counter()
+    out = svc.flush()
+    t_flush = time.perf_counter() - t0
+    groups = svc.stats()["scheduler"]["groups"] - groups_before
+    r_pd, r_fe = out[t_pd], out[t_fe]
+    assert groups == 2, f"expected 2 (graph, config) groups, got {groups}"
+    assert r_pd.config != r_fe.config, "configs collapsed into one group"
+    assert r_pd.cache == "mem" and r_fe.cache == "mem", (
+        "mixed-config flush missed the artifact cache: "
+        f"pd={r_pd.cache} fe={r_fe.cache}")
+    assert r_pd.converged and r_fe.converged
+    return t_flush, groups
 
 
 def bench_graph(name, g, k=8, repeat=3):
@@ -52,17 +78,20 @@ def bench_graph(name, g, k=8, repeat=3):
 
     pd_cfg = pdgrass_config(alpha=0.05, chunk=512)
     fe_cfg = fegrass_config(alpha=0.05, chunk=512)
-    services = [
-        ("dev", SolverService(pipeline=pd_cfg, precond="none")),
-        ("dev+hier:pd", SolverService(pipeline=pd_cfg, precond="hierarchy")),
-        ("dev+hier:fe", SolverService(pipeline=fe_cfg, precond="hierarchy")),
-    ]
+    svc_none = SolverService(pipeline=pd_cfg, precond="none")
+    svc_hier = SolverService(pipeline=pd_cfg, precond="hierarchy")
+    handle = svc_hier.register(g)   # content hash paid once, reused below
+    svc_none.register(handle)
     rows = []
-    for tag, svc in services:
+    for tag, svc, pipeline in [
+            ("dev", svc_none, None),
+            ("dev+hier:pd", svc_hier, None),
+            ("dev+hier:fe", svc_hier, fe_cfg)]:
         t0 = time.perf_counter()
-        cold = svc.solve(g, B)           # build + jit + first solve
+        cold = svc.solve(handle, B, pipeline=pipeline)  # build + jit + solve
         t_cold = time.perf_counter() - t0
-        t_warm, warm = timeit(svc.solve, g, B, repeat=repeat)
+        t_warm, warm = timeit(svc.solve, handle, B, pipeline=pipeline,
+                              repeat=repeat)
         assert warm.cache == "mem" and warm.converged, (name, tag)
         rows.append({
             "tag": tag,
@@ -83,9 +112,15 @@ def bench_graph(name, g, k=8, repeat=3):
               f"relres={r['relres']:.1e}  speedup_vs_host={speedup:8.1f}x")
     by_tag = {r["tag"]: r for r in rows}
     pd_r, fe_r = by_tag["dev+hier:pd"], by_tag["dev+hier:fe"]
-    print(f"  pd-vs-fe (one Pipeline code path): iters {pd_r['iters']} vs "
-          f"{fe_r['iters']}, warm {pd_r['warm_ms_per_rhs']:.2f} vs "
+    print(f"  pd-vs-fe (one service, per-request configs): iters "
+          f"{pd_r['iters']} vs {fe_r['iters']}, warm "
+          f"{pd_r['warm_ms_per_rhs']:.2f} vs "
           f"{fe_r['warm_ms_per_rhs']:.2f} ms/rhs")
+    t_mixed, groups = mixed_config_flush(svc_hier, handle, B, pd_cfg, fe_cfg)
+    stats = svc_hier.stats()
+    print(f"  mixed flush (pd+fe):  {t_mixed*1e3:8.1f} ms for k={k} RHS in "
+          f"{groups} groups  hash_events={stats['store']['hash_events']} "
+          f"cache_hits={stats['cache']['hits']}")
     warm_best = min(r["warm_ms_per_rhs"] for r in rows)
     assert warm_best < host_ms, (
         f"{name}: cached device path ({warm_best:.1f} ms/rhs) did not beat "

@@ -1,11 +1,15 @@
 """End-to-end driver (the paper's application): sparsifier-preconditioned
-Laplacian solve, served through the ``repro.solver`` subsystem.
+Laplacian solve, served through the ``repro.solver`` subsystem's v2 request
+plane.
 
-Pipeline per graph (paid once, then cached by content hash): effective-weight
-spanning tree (Boruvka, JAX) -> binary lifting -> strict-similarity recovery
-(round engine) -> SF-GRASS-style multilevel hierarchy -> jit'd batched
-device PCG with the hierarchy V-cycle as preconditioner.  Repeated solves on
-the same graph skip all of it and run the cached jit'd solver.
+Pipeline per (graph, config), paid once then cached by content hash:
+effective-weight spanning tree (Boruvka, JAX) -> binary lifting ->
+strict-similarity recovery (round engine) -> SF-GRASS-style multilevel
+hierarchy -> jit'd batched device PCG with the hierarchy V-cycle as
+preconditioner.  The serving flow is: register the graph once (one O(m)
+content hash -> GraphHandle), warm the artifact cache, submit ticket
+futures — optionally with per-request PipelineConfig overrides — and flush;
+the scheduler batches each (graph, config) group into one device solve.
 
     PYTHONPATH=src python examples/solve_laplacian.py [--scale medium]
 """
@@ -16,8 +20,8 @@ import numpy as np
 
 from repro.core import mesh2d, pdgrass
 from repro.core.pcg import pcg_host
-from repro.pipeline import pdgrass_config
-from repro.solver import SolverService
+from repro.pipeline import fegrass_config, pdgrass_config
+from repro.solver import SolveRequest, SolverService
 
 
 def main():
@@ -40,22 +44,41 @@ def main():
     B -= B.mean(axis=0)
 
     # the service takes the full staged pipeline config — any family member
-    # (swap in fegrass_config for the baseline-preconditioned service)
-    svc = SolverService(pipeline=pdgrass_config(alpha=args.alpha, chunk=512),
-                        precond="hierarchy")
+    pd_cfg = pdgrass_config(alpha=args.alpha, chunk=512)
+    fe_cfg = fegrass_config(alpha=args.alpha, chunk=512)
+    svc = SolverService(pipeline=pd_cfg, precond="hierarchy")
+
+    # register once: the O(m) content hash lives on the handle from here on
+    handle = svc.register(g)
     t0 = time.perf_counter()
-    cold = svc.solve(g, B)
-    t_cold = time.perf_counter() - t0
-    print(f"cold solve (steps 1-4 + hierarchy + jit + solve): "
-          f"{t_cold:.1f} s  cache={cold.cache}  "
-          f"iters={int(cold.iters.max())}  relres={cold.relres.max():.2e}")
+    sources = svc.warmup(handle, configs=[pd_cfg, fe_cfg])
+    t_warmup = time.perf_counter() - t0
+    print(f"warmup (steps 1-4 + hierarchy per config): {t_warmup:.1f} s  "
+          f"artifact sources={sources}")
+
+    # one flush, two pipeline configs, one graph: the scheduler splits the
+    # pending tickets into per-(graph, config) groups, each a single
+    # batched jit'd device PCG against its own cached hierarchy
+    t_pd = svc.submit(SolveRequest(graph=handle, b=B))
+    t_fe = svc.submit(SolveRequest(graph=handle, b=B, pipeline=fe_cfg))
+    t0 = time.perf_counter()
+    svc.flush()
+    t_flush = time.perf_counter() - t0
+    r_pd, r_fe = t_pd.result(), t_fe.result()   # futures, any order
+    print(f"mixed flush (cold jit): {t_flush:.1f} s  "
+          f"pd: iters={int(r_pd.iters.max())} cache={r_pd.cache}  "
+          f"fe: iters={int(r_fe.iters.max())} cache={r_fe.cache}")
 
     t0 = time.perf_counter()
-    warm = svc.solve(g, B)
+    warm = svc.solve(handle, B)
     t_warm = time.perf_counter() - t0
     print(f"warm solve (cache hit, jit'd batched PCG): "
           f"{t_warm*1e3:.0f} ms for k={args.batch} RHS "
           f"({t_warm*1e3/args.batch:.1f} ms/rhs)  cache={warm.cache}")
+    stats = svc.stats()
+    print(f"stats: groups={stats['scheduler']['groups']} "
+          f"hash_events={stats['store']['hash_events']} "
+          f"solves_by_config={stats['solves_by_config']}")
 
     # reference: the pre-service path — rebuild the sparsifier and factor it
     # per call, then host PCG (this is what every solve used to cost)

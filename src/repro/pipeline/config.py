@@ -30,6 +30,7 @@ Configs serialize losslessly (``to_dict``/``from_dict``) and canonically
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Optional
 
@@ -84,6 +85,11 @@ class PipelineConfig:
     def fingerprint(self) -> str:
         """Canonical serialization — feeds ``solver.cache`` content hashes."""
         return json.dumps(self.to_dict(), sort_keys=True)
+
+    def digest(self, n: int = 12) -> str:
+        """Short stable hash of :meth:`fingerprint` — a human-sized label
+        for per-config stats keys and log lines."""
+        return hashlib.sha256(self.fingerprint().encode()).hexdigest()[:n]
 
     def replace(self, **overrides) -> "PipelineConfig":
         return dataclasses.replace(self, **overrides)

@@ -1,6 +1,6 @@
 """repro.solver: multilevel sparsifier-preconditioned Laplacian solver service.
 
-The first real *consumer* subsystem of the pdGRASS pipeline.  Four layers:
+The first real *consumer* subsystem of the pdGRASS pipeline.  Five layers:
 
   * :mod:`repro.solver.hierarchy`  — recursive pdGRASS: sparsify, contract,
     re-sparsify (SF-GRASS-style) into a multilevel preconditioner chain.
@@ -8,22 +8,30 @@ The first real *consumer* subsystem of the pdGRASS pipeline.  Four layers:
     routes through the Pallas ELL kernel and whose preconditioner applies the
     hierarchy via forward/backward tree sweeps (symmetric V-cycle).
   * :mod:`repro.solver.cache`      — content-hash-keyed sparsifier/hierarchy
-    cache (in-memory LRU + optional on-disk) so repeated solves on the same
-    graph skip pipeline steps 1-4 entirely.
-  * :mod:`repro.solver.service`    — request/response solve engine with
-    slot batching over right-hand sides (the serve/engine.py idiom).
+    cache (in-memory LRU + bounded on-disk tier) so repeated solves on the
+    same graph skip pipeline steps 1-4 entirely.
+  * :mod:`repro.solver.requests`   — the serving request plane: GraphStore /
+    GraphHandle (register once, hash once), SolveRequest with per-request
+    PipelineConfig overrides, SolveTicket futures.
+  * :mod:`repro.solver.service`    — request/response solve engine: a
+    mixed-config scheduler groups pending work by (graph fingerprint,
+    config fingerprint) and slot-batches each group's right-hand sides.
 """
-from repro.solver.cache import (LRUCache, graph_fingerprint,
-                                pipeline_fingerprint)
+from repro.solver.cache import (LRUCache, artifact_key, content_fingerprint,
+                                graph_fingerprint, pipeline_fingerprint)
 from repro.solver.device_pcg import (BatchedPCGResult, batched_pcg,
                                      ell_laplacian, make_matvec, make_solver)
 from repro.solver.hierarchy import Hierarchy, Level, build_hierarchy, subgraph
-from repro.solver.service import SolveRequest, SolveResponse, SolverService
+from repro.solver.requests import (GraphHandle, GraphStore, SolveRequest,
+                                   SolveResponse, SolveTicket)
+from repro.solver.service import SolverService
 
 __all__ = [
     "Hierarchy", "Level", "build_hierarchy", "subgraph",
     "BatchedPCGResult", "batched_pcg", "ell_laplacian", "make_matvec",
     "make_solver",
-    "LRUCache", "graph_fingerprint", "pipeline_fingerprint",
-    "SolveRequest", "SolveResponse", "SolverService",
+    "LRUCache", "artifact_key", "content_fingerprint", "graph_fingerprint",
+    "pipeline_fingerprint",
+    "GraphHandle", "GraphStore", "SolveRequest", "SolveResponse",
+    "SolveTicket", "SolverService",
 ]

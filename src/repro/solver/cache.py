@@ -7,9 +7,19 @@ over (same mesh, new right-hand sides), so the solver service keys every
 built artifact by a SHA-256 fingerprint of the graph content plus the build
 parameters and reuses it: a cache hit skips steps 1-4 entirely.
 
+The graph-content part of the hash is O(m) and therefore memoized on the
+``Graph`` instance itself (:func:`content_fingerprint`): the first request
+for a graph pays one pass over the edge arrays, every later fingerprint —
+any extras, any pipeline config — is a dict lookup plus a hash over two
+short digests.  ``GraphStore.register`` in :mod:`repro.solver.requests`
+builds on this to hand out handles that carry the digest explicitly.
+
 Two tiers:
   * in-memory LRU (capacity-bounded, per-process),
-  * optional on-disk pickle directory (shared across processes/restarts).
+  * optional on-disk pickle directory (shared across processes/restarts),
+    bounded by ``disk_max_entries`` / ``disk_max_bytes`` with
+    least-recently-used eviction (mtime is refreshed on every disk hit, so
+    oldest-mtime == least recently used).
 """
 from __future__ import annotations
 
@@ -22,54 +32,105 @@ from typing import Any, Callable, Optional, Tuple
 
 from repro.core.graph import Graph
 
+# Count of O(m) content hashes actually computed (memo misses).  Tests and
+# ``SolverService.stats()`` read this to prove registered graphs are never
+# re-fingerprinted on the request path.
+HASH_EVENTS = 0
 
-def graph_fingerprint(graph: Graph, extra: tuple = ()) -> str:
-    """SHA-256 over the canonical edge arrays + build parameters.
+
+def content_fingerprint(graph: Graph) -> str:
+    """SHA-256 over the canonical edge arrays, memoized per Graph instance.
 
     ``build_graph`` canonicalizes (src < dst, sorted, deduped), so two
     logically identical graphs hash identically regardless of input edge
-    order.  ``extra`` folds in solver parameters (alpha, precond, ...) so
-    different builds of the same graph get distinct keys.
+    order.  The digest is cached in the instance ``__dict__`` (frozen
+    dataclasses still own one), so the O(m) pass over the arrays runs at
+    most once per graph object per process.  The hashed arrays are frozen
+    (``writeable = False``) alongside the memo: an in-place edit that would
+    silently desync the digest from the content now raises instead.
     """
+    memo = graph.__dict__.get("_content_fp")
+    if memo is not None:
+        return memo
+    global HASH_EVENTS
+    HASH_EVENTS += 1
     h = hashlib.sha256()
     h.update(b"pdgrass-graph-v1")
     h.update(int(graph.n).to_bytes(8, "little"))
     h.update(graph.src.tobytes())
     h.update(graph.dst.tobytes())
     h.update(graph.weight.tobytes())
+    fp = h.hexdigest()
+    for arr in (graph.src, graph.dst, graph.weight):
+        arr.flags.writeable = False
+    object.__setattr__(graph, "_content_fp", fp)
+    return fp
+
+
+def graph_fingerprint(graph: Graph, extra: tuple = ()) -> str:
+    """Fingerprint of (graph content, build parameters).
+
+    ``extra`` folds in solver parameters (alpha, precond, ...) so different
+    builds of the same graph get distinct keys.  Only the memoized content
+    digest is rehashed here — never the edge arrays themselves.
+    """
+    h = hashlib.sha256()
+    h.update(content_fingerprint(graph).encode())
+    for item in extra:
+        h.update(repr(item).encode())
+    return h.hexdigest()
+
+
+def artifact_key(content_fp: str, config, extra: tuple = ()) -> str:
+    """Cache key from an already-computed content digest + PipelineConfig.
+
+    The handle/scheduler path: ``GraphHandle`` carries ``content_fp``, the
+    request carries the config, so keying a group is pure string hashing.
+    ``config.fingerprint()`` is the canonical JSON serialization of the
+    staged pipeline config — equal config trees share cache entries, any
+    stage/knob difference (engine, score rule, alpha, ...) gets its own key.
+    """
+    h = hashlib.sha256()
+    h.update(content_fp.encode())
+    h.update(config.fingerprint().encode())
     for item in extra:
         h.update(repr(item).encode())
     return h.hexdigest()
 
 
 def pipeline_fingerprint(graph: Graph, config, extra: tuple = ()) -> str:
-    """Fingerprint of (graph, PipelineConfig, extras).
-
-    ``config.fingerprint()`` is the canonical JSON serialization of the
-    staged pipeline config, so two services configured with equal config
-    trees share cache entries, and any stage/knob difference (engine,
-    score rule, alpha, ...) gets a distinct key.
-    """
-    return graph_fingerprint(graph,
-                             extra=(config.fingerprint(),) + tuple(extra))
+    """Fingerprint of (graph, PipelineConfig, extras) — raw-Graph shim over
+    :func:`artifact_key`."""
+    return artifact_key(content_fingerprint(graph), config, extra)
 
 
 class LRUCache:
-    """In-memory LRU with an optional on-disk second tier.
+    """In-memory LRU with an optional bounded on-disk second tier.
 
     ``get_or_build(key, build)`` returns ``(value, source)`` where source is
     "mem", "disk", or "miss" (built now).  The builder runs at most once per
     key per process; disk entries survive restarts.
+
+    The disk tier is capped by ``disk_max_entries`` and/or ``disk_max_bytes``
+    (``None`` = unbounded): after every write the directory is pruned,
+    evicting least-recently-used pickles first (disk hits refresh mtime).
+    The entry just written is never the eviction victim, so a single
+    artifact larger than ``disk_max_bytes`` still round-trips.
     """
 
-    def __init__(self, capacity: int = 16, disk_dir: Optional[str] = None):
+    def __init__(self, capacity: int = 16, disk_dir: Optional[str] = None,
+                 disk_max_entries: Optional[int] = None,
+                 disk_max_bytes: Optional[int] = None):
         self.capacity = int(capacity)
         self.disk_dir = disk_dir
+        self.disk_max_entries = disk_max_entries
+        self.disk_max_bytes = disk_max_bytes
         self._mem: "collections.OrderedDict[str, Any]" = collections.OrderedDict()
         self.hits = 0
         self.disk_hits = 0
         self.misses = 0
         self.evictions = 0
+        self.disk_evictions = 0
         if disk_dir:
             os.makedirs(disk_dir, exist_ok=True)
 
@@ -79,6 +140,47 @@ class LRUCache:
     def _disk_path(self, key: str) -> Optional[str]:
         return os.path.join(self.disk_dir, f"{key}.pkl") if self.disk_dir \
             else None
+
+    def _disk_entries(self):
+        """[(path, mtime, bytes)] for every pickle in the disk tier."""
+        if not self.disk_dir:
+            return []
+        out = []
+        for name in os.listdir(self.disk_dir):
+            if not name.endswith(".pkl"):
+                continue
+            path = os.path.join(self.disk_dir, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue  # concurrently evicted by another process
+            out.append((path, st.st_mtime, st.st_size))
+        return out
+
+    def _prune_disk(self, keep: str) -> None:
+        """Evict least-recently-used pickles until under both caps; never
+        evicts ``keep`` (the path just written)."""
+        if self.disk_max_entries is None and self.disk_max_bytes is None:
+            return
+        entries = sorted(self._disk_entries(), key=lambda e: e[1])
+        total = sum(size for _, _, size in entries)
+        count = len(entries)
+        for path, _, size in entries:
+            over = ((self.disk_max_entries is not None
+                     and count > self.disk_max_entries)
+                    or (self.disk_max_bytes is not None
+                        and total > self.disk_max_bytes))
+            if not over:
+                break
+            if path == keep:
+                continue
+            try:
+                os.remove(path)
+            except OSError:
+                continue
+            self.disk_evictions += 1
+            count -= 1
+            total -= size
 
     def _put_mem(self, key: str, value: Any) -> None:
         self._mem[key] = value
@@ -94,9 +196,20 @@ class LRUCache:
             self.hits += 1
             return self._mem[key], "mem"
         path = self._disk_path(key)
-        if path and os.path.exists(path):
-            with open(path, "rb") as f:
-                value = pickle.load(f)
+        if path:
+            try:
+                with open(path, "rb") as f:
+                    value = pickle.load(f)
+            except (OSError, pickle.PickleError, EOFError, ValueError,
+                    AttributeError, ImportError):
+                # not on disk — or evicted/torn/corrupted by a concurrent
+                # process between our stat and read, or pickled against a
+                # schema this process no longer has: a miss, rebuild
+                return None, "miss"
+            try:
+                os.utime(path)  # refresh recency for oldest-mtime eviction
+            except OSError:
+                pass
             self.disk_hits += 1
             self._put_mem(key, value)
             return value, "disk"
@@ -111,6 +224,7 @@ class LRUCache:
             with os.fdopen(fd, "wb") as f:
                 pickle.dump(value, f)
             os.replace(tmp, path)
+            self._prune_disk(keep=path)
 
     def get_or_build(self, key: str, build: Callable[[], Any]) -> Tuple[Any, str]:
         value, source = self.get(key)
@@ -123,6 +237,16 @@ class LRUCache:
 
     @property
     def stats(self) -> dict:
-        return {"hits": self.hits, "disk_hits": self.disk_hits,
-                "misses": self.misses, "evictions": self.evictions,
-                "size": len(self._mem), "capacity": self.capacity}
+        out = {"hits": self.hits, "disk_hits": self.disk_hits,
+               "misses": self.misses, "evictions": self.evictions,
+               "size": len(self._mem), "capacity": self.capacity}
+        if self.disk_dir:
+            entries = self._disk_entries()
+            out.update({
+                "disk_entries": len(entries),
+                "disk_bytes": sum(size for _, _, size in entries),
+                "disk_evictions": self.disk_evictions,
+                "disk_max_entries": self.disk_max_entries,
+                "disk_max_bytes": self.disk_max_bytes,
+            })
+        return out

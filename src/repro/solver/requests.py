@@ -1,0 +1,198 @@
+"""Request-plane objects for the serving-grade solver API.
+
+Three ideas, one module:
+
+  * :class:`GraphHandle` / :class:`GraphStore` — register a graph once,
+    pay its O(m) content hash once, and pass the handle on every request.
+    The store dedupes by content digest, so two structurally identical
+    graphs resolve to the same handle (and therefore the same cache keys).
+  * :class:`SolveRequest` — a (graph-or-handle, rhs) pair plus its solve
+    contract (``tol``/``maxiter``) and an optional per-request
+    ``pipeline=PipelineConfig(...)`` override: requests with different
+    stage mixes batch through one service and each hit their own cached
+    hierarchy.
+  * :class:`SolveTicket` — the future handed back by ``submit``.  Tickets
+    are monotonically numbered per service (stable across flushes, unlike
+    the v1 per-flush list indices), expose ``done()`` / ``result()``, and
+    subclass ``int`` so v1 code that indexed the flush dict with the bare
+    ticket keeps working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.pipeline import PipelineConfig
+from repro.solver import cache as _cache
+from repro.solver.cache import content_fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphHandle:
+    """A registered graph plus its memoized content digest.
+
+    Handles are cheap value objects: equality/hash follow the fingerprint,
+    so they key dicts and dedupe naturally.  Obtain them from
+    :meth:`GraphStore.register` (or ``SolverService.register``).
+    """
+
+    graph: Graph
+    fingerprint: str
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    @property
+    def m(self) -> int:
+        return self.graph.m
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, GraphHandle) and \
+            self.fingerprint == other.fingerprint
+
+    def __hash__(self) -> int:
+        return hash(self.fingerprint)
+
+    def __repr__(self) -> str:
+        return (f"GraphHandle(n={self.n}, m={self.m}, "
+                f"fingerprint={self.fingerprint[:12]}...)")
+
+
+class GraphStore:
+    """Registry of content-addressed graphs behind a solver service.
+
+    ``register`` is idempotent: re-registering the same graph object is a
+    memo lookup, and registering a structurally identical copy returns the
+    *existing* handle (one graph in the store, one set of cache entries).
+    """
+
+    def __init__(self):
+        self._handles: Dict[str, GraphHandle] = {}
+        self.hash_events = 0   # O(m) content hashes this store triggered
+
+    def register(self, graph: Union[Graph, GraphHandle]) -> GraphHandle:
+        if isinstance(graph, GraphHandle):
+            self._handles.setdefault(graph.fingerprint, graph)
+            return self._handles[graph.fingerprint]
+        if not isinstance(graph, Graph):
+            raise TypeError(
+                f"register wants a Graph or GraphHandle, got "
+                f"{type(graph).__name__}")
+        before = _cache.HASH_EVENTS
+        fp = content_fingerprint(graph)
+        self.hash_events += _cache.HASH_EVENTS - before
+        handle = self._handles.get(fp)
+        if handle is None:
+            handle = GraphHandle(graph=graph, fingerprint=fp)
+            self._handles[fp] = handle
+        return handle
+
+    def get(self, fingerprint: str) -> Optional[GraphHandle]:
+        return self._handles.get(fingerprint)
+
+    def __len__(self) -> int:
+        return len(self._handles)
+
+    def __contains__(self, item) -> bool:
+        """Content-based membership, mirroring ``register``'s dedup: a
+        structurally identical Graph is "in" the store even if this
+        particular object was never registered (its fingerprint is computed
+        — and memoized — on demand)."""
+        if isinstance(item, GraphHandle):
+            return item.fingerprint in self._handles
+        if isinstance(item, Graph):
+            return content_fingerprint(item) in self._handles
+        return item in self._handles
+
+    @property
+    def stats(self) -> dict:
+        return {"graphs": len(self._handles),
+                "hash_events": self.hash_events}
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One Laplacian solve: ``L_G x = b`` under a per-request contract.
+
+    ``graph`` may be a raw :class:`Graph` (v1 style — the service registers
+    it on submit) or a :class:`GraphHandle`.  ``pipeline`` overrides the
+    service-wide :class:`PipelineConfig` for this request only; requests
+    with distinct configs are scheduled as separate groups sharing the
+    flush.
+    """
+
+    graph: Union[Graph, GraphHandle]
+    b: np.ndarray            # [n] or [n, k]
+    tol: float = 1e-5
+    maxiter: int = 2000
+    pipeline: Optional[PipelineConfig] = None
+
+
+@dataclasses.dataclass
+class SolveResponse:
+    x: np.ndarray            # same trailing shape as the request's b
+    iters: np.ndarray        # [k] per-column PCG iterations (all passes)
+    relres: np.ndarray       # [k] f64-measured true relative residuals
+    converged: bool
+    cache: str               # "mem" | "disk" | "miss" (artifacts source)
+    refinements: int         # mixed-precision refinement passes taken
+    setup_ms: float          # hierarchy+ELL build (0.0 on a cache hit path)
+    solve_ms: float
+    config: str = ""         # digest of the PipelineConfig that served this
+
+
+class SolveTicket(int):
+    """Future for a submitted request.  ``done()`` says whether a flush has
+    settled it (with a response or a failure); ``result()`` returns the
+    :class:`SolveResponse` — or raises the group's build/solve exception —
+    flushing the owning service first if the ticket is still pending.
+    Tickets are resolvable in any order — each holds its own outcome.
+
+    Subclasses ``int`` (the service-wide monotonic ticket id), so v1 code
+    doing ``svc.flush()[ticket]`` keeps working: flush dicts are keyed by
+    these same objects and ints hash by value.
+    """
+
+    def __new__(cls, ticket_id: int, service=None,
+                request: Optional[SolveRequest] = None):
+        self = super().__new__(cls, ticket_id)
+        self._service = service
+        self._request = request
+        self._response: Optional[SolveResponse] = None
+        self._error: Optional[BaseException] = None
+        return self
+
+    @property
+    def request(self) -> Optional[SolveRequest]:
+        return self._request
+
+    def done(self) -> bool:
+        return self._response is not None or self._error is not None
+
+    def error(self) -> Optional[BaseException]:
+        """The exception that failed this ticket's group, if any."""
+        return self._error
+
+    def result(self) -> SolveResponse:
+        if not self.done() and self._service is not None:
+            self._service.flush()
+        if self._error is not None:
+            raise self._error
+        if self._response is None:
+            raise RuntimeError(
+                f"ticket {int(self)} was not resolved by flush() — was it "
+                f"submitted to this service?")
+        return self._response
+
+    def _resolve(self, response: SolveResponse) -> None:
+        self._response = response
+
+    def _fail(self, error: BaseException) -> None:
+        self._error = error
+
+    def __repr__(self) -> str:
+        return f"SolveTicket({int(self)}, done={self.done()})"
