@@ -19,6 +19,12 @@ and feGRASS-preconditioned requests for the same mesh in one flush; the
 scheduler splits them into two (graph, config) groups, each cache-hitting
 its own hierarchy.
 
+A **hierarchy-build row** times the multilevel build under both
+contraction modes (``host`` sequential greedy matching vs the default
+``device`` jit'd propose/accept matching) and asserts they produce the
+same chain shape (depth, per-level sizes) — the parity check runs in CI
+through ``--quick``.
+
     PYTHONPATH=src python benchmarks/solver_bench.py [--scale small] [--k 8]
     PYTHONPATH=src python benchmarks/solver_bench.py --quick
 """
@@ -35,7 +41,8 @@ from benchmarks.common import timeit  # noqa: E402
 from repro.core import barabasi_albert, mesh2d, pdgrass  # noqa: E402
 from repro.core.pcg import pcg_host  # noqa: E402
 from repro.pipeline import fegrass_config, pdgrass_config  # noqa: E402
-from repro.solver import SolveRequest, SolverService  # noqa: E402
+from repro.solver import (SolveRequest, SolverService,  # noqa: E402
+                          build_hierarchy)
 
 
 def host_solve_per_call(g, b):
@@ -66,6 +73,34 @@ def mixed_config_flush(svc, handle, B, pd_cfg, fe_cfg):
         f"pd={r_pd.cache} fe={r_fe.cache}")
     assert r_pd.converged and r_fe.converged
     return t_flush, groups
+
+
+def hierarchy_build_row(name, g, cfg):
+    """Time the multilevel hierarchy build under both contraction modes.
+
+    The device path must agree with the host oracle on the chain shape
+    (depth + per-level sizes — the strict total order makes the clustering
+    identical), so any drift in the propose/accept matching fails the bench
+    before it shows up as solver-quality noise.  Device cold includes the
+    per-level jit compiles; warm is the serving-relevant rebuild time.
+    """
+    t0 = time.perf_counter()
+    h_host = build_hierarchy(g, config=cfg, contraction="host")
+    t_host = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    h_dev = build_hierarchy(g, config=cfg, contraction="device")
+    t_dev_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    h_dev = build_hierarchy(g, config=cfg, contraction="device")
+    t_dev = time.perf_counter() - t0
+    assert h_dev.depth == h_host.depth, (
+        f"{name}: device depth {h_dev.depth} != host {h_host.depth}")
+    assert h_dev.level_sizes == h_host.level_sizes, (
+        f"{name}: device levels {h_dev.level_sizes} != host "
+        f"{h_host.level_sizes}")
+    print(f"  hier build:   host={t_host*1e3:8.1f} ms  "
+          f"device={t_dev*1e3:8.1f} ms (cold {t_dev_cold*1e3:.1f} ms)  "
+          f"depth={h_dev.depth} levels={h_dev.level_sizes}")
 
 
 def bench_graph(name, g, k=8, repeat=3):
@@ -103,6 +138,7 @@ def bench_graph(name, g, k=8, repeat=3):
 
     host_ms = t_host * 1e3
     print(f"\n{name}: |V|={g.n} |E|={g.m}  batch k={k}")
+    hierarchy_build_row(name, g, pd_cfg)
     print(f"  host per-call:        {host_ms:10.1f} ms/rhs   "
           f"iters={res_host.iters}")
     for r in rows:

@@ -3,6 +3,9 @@
 Public API:
     build_graph / generators      (repro.core.graph)
     DeviceGraph                   (repro.core.device_graph)  -- device pytree
+    graph_ops primitives          (repro.core.graph_ops)  -- jit-safe
+        segment_argmax / handshake / propose_accept_matching /
+        pointer_jump / compact_labels / coalesce_edges
     prepare, pdgrass, Sparsifier  (repro.core.sparsify)
     fegrass                       (repro.core.fegrass)  -- baseline
     pcg_host, pcg_jax, quality_iters (repro.core.pcg)
@@ -14,6 +17,9 @@ from repro.core.graph import (Graph, build_graph, grid2d, mesh2d,
                               barabasi_albert, watts_strogatz, random_regular,
                               star_hub, suite)
 from repro.core.device_graph import DeviceGraph
+from repro.core.graph_ops import (coalesce_edges, compact_labels, handshake,
+                                  pointer_jump, propose_accept_matching,
+                                  segment_argmax)
 from repro.core.sparsify import Prepared, Sparsifier, prepare, pdgrass
 from repro.core.fegrass import fegrass
 from repro.core.pcg import pcg_host, pcg_jax, quality_iters
@@ -22,6 +28,8 @@ __all__ = [
     "Graph", "DeviceGraph", "build_graph", "grid2d", "mesh2d",
     "barabasi_albert", "watts_strogatz", "random_regular", "star_hub",
     "suite",
+    "segment_argmax", "handshake", "propose_accept_matching",
+    "pointer_jump", "compact_labels", "coalesce_edges",
     "Prepared", "Sparsifier", "prepare", "pdgrass", "fegrass",
     "pcg_host", "pcg_jax", "quality_iters",
 ]

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph_ops import pointer_jump, segment_argmax
+
 
 def bfs_dist(n: int, usrc: jnp.ndarray, udst: jnp.ndarray, root) -> jnp.ndarray:
     """Unweighted BFS distances from ``root`` via edge relaxation.
@@ -66,28 +68,27 @@ class TreeResult(NamedTuple):
 def boruvka_max_st(n: int, src, dst, eff_w) -> jnp.ndarray:
     """Maximum spanning tree over ``eff_w``; returns [m] bool mask.
 
-    Deterministic via (weight, -edge index) total order.  O(log n) rounds;
-    every round is flat segment-max / gather / scatter work.
+    Deterministic via (weight, -edge index) total order.  O(log n) rounds,
+    each a composition of the :mod:`repro.core.graph_ops` primitives: every
+    component segment-argmaxes its best outgoing edge (proposal), hooks to
+    the component across it (accept — 2-cycles broken to the smaller
+    label), and the hooking forest collapses by pointer jumping.
     """
     m = src.shape[0]
     eidx = jnp.arange(m, dtype=jnp.int32)
     varange = jnp.arange(n, dtype=jnp.int32)
+    eids2 = jnp.concatenate([eidx, eidx])
 
     def round_body(state):
         comp, in_tree, _ = state
         cu, cv = comp[src], comp[dst]
         valid = cu != cv
         key = jnp.where(valid, eff_w, -jnp.inf)
-        # Best outgoing weight per component (from either endpoint).
-        best = jnp.full((n,), -jnp.inf, dtype=eff_w.dtype)
-        best = best.at[cu].max(key)
-        best = best.at[cv].max(key)
-        # Tie-break: minimal edge index among weight-maximal edges.
-        is_best_u = valid & (key == best[cu])
-        is_best_v = valid & (key == best[cv])
-        pick = jnp.full((n,), m, dtype=jnp.int32)
-        pick = pick.at[cu].min(jnp.where(is_best_u, eidx, m))
-        pick = pick.at[cv].min(jnp.where(is_best_v, eidx, m))
+        # Best outgoing edge per component, proposed from either endpoint;
+        # duplicated element ids make both directions resolve to one winner.
+        pick, _ = segment_argmax(jnp.concatenate([key, key]),
+                                 jnp.concatenate([cu, cv]), n,
+                                 element_ids=eids2, sentinel=m)
         has = pick < m
         pe = jnp.where(has, pick, 0)
         # Hook each component to the component across its picked edge.
@@ -97,15 +98,7 @@ def boruvka_max_st(n: int, src, dst, eff_w) -> jnp.ndarray:
         # Break 2-cycles: keep the smaller label as the new root.
         p2 = parent[parent]
         parent = jnp.where((p2 == varange) & (varange < parent), varange, parent)
-
-        # Pointer jumping to full shortcut.
-        def pj_body(p):
-            return p[p]
-
-        def pj_cond(p):
-            return jnp.any(p[p] != p)
-
-        parent = jax.lax.while_loop(pj_cond, pj_body, parent)
+        parent = pointer_jump(parent)
         in_tree = in_tree.at[jnp.where(has, pick, m)].set(True, mode="drop")
         comp_new = parent[comp]
         return comp_new, in_tree, jnp.any(valid)

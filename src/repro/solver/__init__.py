@@ -4,9 +4,13 @@ The first real *consumer* subsystem of the pdGRASS pipeline.  Five layers:
 
   * :mod:`repro.solver.hierarchy`  — recursive pdGRASS: sparsify, contract,
     re-sparsify (SF-GRASS-style) into a multilevel preconditioner chain.
+    Contraction runs on the device by default (jit'd propose/accept
+    heavy-edge matching composed from :mod:`repro.core.graph_ops`); the
+    sequential host matching survives as the parity oracle.
   * :mod:`repro.solver.device_pcg` — fully jit'd batched-RHS PCG whose matvec
     routes through the Pallas ELL kernel and whose preconditioner applies the
-    hierarchy via forward/backward tree sweeps (symmetric V-cycle).
+    hierarchy via forward/backward tree sweeps (symmetric V-cycle with
+    Chebyshev polynomial smoothing).
   * :mod:`repro.solver.cache`      — content-hash-keyed sparsifier/hierarchy
     cache (in-memory LRU + bounded on-disk tier) so repeated solves on the
     same graph skip pipeline steps 1-4 entirely.
@@ -20,18 +24,22 @@ The first real *consumer* subsystem of the pdGRASS pipeline.  Five layers:
 from repro.solver.cache import (LRUCache, artifact_key, content_fingerprint,
                                 graph_fingerprint, pipeline_fingerprint)
 from repro.solver.device_pcg import (BatchedPCGResult, batched_pcg,
-                                     ell_laplacian, make_matvec, make_solver)
-from repro.solver.hierarchy import Hierarchy, Level, build_hierarchy, subgraph
-from repro.solver.requests import (GraphHandle, GraphStore, SolveRequest,
-                                   SolveResponse, SolveTicket)
+                                     ell_laplacian, make_matvec, make_solver,
+                                     make_vcycle)
+from repro.solver.hierarchy import (Hierarchy, Level, build_hierarchy,
+                                    device_contract, device_matching,
+                                    subgraph)
+from repro.solver.requests import (AdmissionError, GraphHandle, GraphStore,
+                                   SolveRequest, SolveResponse, SolveTicket)
 from repro.solver.service import SolverService
 
 __all__ = [
     "Hierarchy", "Level", "build_hierarchy", "subgraph",
+    "device_contract", "device_matching",
     "BatchedPCGResult", "batched_pcg", "ell_laplacian", "make_matvec",
-    "make_solver",
+    "make_solver", "make_vcycle",
     "LRUCache", "artifact_key", "content_fingerprint", "graph_fingerprint",
     "pipeline_fingerprint",
-    "GraphHandle", "GraphStore", "SolveRequest", "SolveResponse",
-    "SolveTicket", "SolverService",
+    "AdmissionError", "GraphHandle", "GraphStore", "SolveRequest",
+    "SolveResponse", "SolveTicket", "SolverService",
 ]

@@ -15,10 +15,16 @@ after re-basing (``x - x[0]``).
 
 The hierarchy preconditioner is a symmetric V(1,1)-cycle over the
 :class:`repro.solver.hierarchy.Hierarchy` chain: a forward sweep down the
-aggregation tree (weighted-Jacobi smooth + residual restriction), a tiny
-dense Cholesky solve at the coarsest level, and a backward sweep up
-(prolongation + smooth).  Symmetric smoothing keeps the operator SPD on the
-mean-zero subspace, which PCG requires.
+aggregation tree (Chebyshev polynomial smooth + residual restriction), a
+tiny dense Cholesky solve at the coarsest level, and a backward sweep up
+(prolongation + smooth).  The smoother is a degree-2/3 Chebyshev polynomial
+in the Jacobi-preconditioned operator ``D^-1 L`` targeting the upper part
+of its spectrum, with the spectral radius estimated per level by a cheap
+power iteration at closure-build time — no ``omega`` to tune, and equal or
+fewer PCG iterations than the weighted-Jacobi smoother it replaced.  The
+polynomial is a fixed symmetric operator, so pre/post-smoothing with the
+same polynomial keeps the V-cycle SPD on the mean-zero subspace, which PCG
+requires.
 """
 from __future__ import annotations
 
@@ -76,18 +82,88 @@ def _center(x):
     return x - jnp.mean(x, axis=0, keepdims=True)
 
 
-def make_vcycle(hier: Hierarchy, *, omega: float = 2.0 / 3.0,
+def estimate_dinv_rho(matvec: Callable, diag, iters: int = 12) -> float:
+    """Power-iteration estimate of ``rho(D^-1 L)`` — the smoother's bound.
+
+    Deterministic start vector, ~``iters`` gather/scatter sweeps, one host
+    sync for the final Rayleigh-style norm.  Runs once per level at
+    closure-build time (the result is baked into the jit'd V-cycle), so the
+    cost is amortized over every solve the closure serves.  The constant
+    nullspace has eigenvalue 0 and decays under iteration, so no explicit
+    projection is needed.
+    """
+    n = diag.shape[0]
+    v = jnp.sin(jnp.arange(n, dtype=jnp.float32) * 1.7 + 0.3)
+    v = v / jnp.linalg.norm(v)
+    d = diag
+
+    def body(_, v):
+        w = matvec(v[:, None])[:, 0] / d
+        return w / jnp.maximum(jnp.linalg.norm(w), jnp.float32(1e-30))
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    w = matvec(v[:, None])[:, 0] / d
+    return float(jnp.linalg.norm(w))
+
+
+def make_chebyshev_smoother(matvec: Callable, diag, rho: float,
+                            degree: int = 3) -> Callable:
+    """Degree-``degree`` Chebyshev smoother for ``L z = r`` with Jacobi
+    scaling, targeting eigenvalues of ``D^-1 L`` in ``[lmax/4, lmax]``
+    (``lmax = 1.1 * rho`` for safety — overestimating is benign,
+    underestimating can amplify the top mode).  The upper-quarter band is
+    the classic smoothing choice: the coarse correction owns the low modes,
+    so the polynomial concentrates its damping where aggregation cannot
+    reach.
+
+    Returns ``smooth(r, z=None)``: ``degree`` recurrence steps from initial
+    guess ``z`` (``None`` = zero).  The correction is a fixed polynomial in
+    ``D^-1 L`` applied to ``D^-1 (r - L z)``, i.e. a symmetric operator —
+    using the same polynomial pre and post keeps the V-cycle SPD.
+    """
+    lmax = 1.1 * rho
+    lmin = lmax / 4.0
+    theta = 0.5 * (lmax + lmin)
+    delta = 0.5 * (lmax - lmin)
+    sigma = theta / delta
+    inv_d = (1.0 / diag)[:, None]
+
+    def smooth(r, z=None):
+        res = r if z is None else r - matvec(z)
+        p = inv_d * res / theta
+        z = p if z is None else z + p
+        rho_prev = 1.0 / sigma
+        for _ in range(degree - 1):
+            res = r - matvec(z)
+            rho_k = 1.0 / (2.0 * sigma - rho_prev)
+            p = (rho_k * rho_prev) * p + (2.0 * rho_k / delta) * (inv_d * res)
+            z = z + p
+            rho_prev = rho_k
+        return z
+
+    return smooth
+
+
+def make_vcycle(hier: Hierarchy, *, degree: int = 2,
                 matvec_impl: str = "ref", tile_n: int = 256) -> Callable:
     """Symmetric V(1,1)-cycle apply ``r [n, k] -> z ~= L_P^+ r``.
 
-    Forward sweep (fine -> coarse): weighted-Jacobi pre-smooth from zero,
+    Forward sweep (fine -> coarse): Chebyshev pre-smooth from zero,
     restrict the residual through the aggregation tree (segment-sum).
     Coarsest: dense triangular solves against the grounded Cholesky factor.
-    Backward sweep (coarse -> fine): prolong (gather), Jacobi post-smooth.
-    The level structure is static, so the recursion unrolls under jit.
+    Backward sweep (coarse -> fine): prolong (gather), Chebyshev
+    post-smooth.  The level structure is static, so the recursion unrolls
+    under jit.  ``degree`` is the Chebyshev polynomial degree (2 or 3 are
+    the sweet spot); each level's spectral radius bound comes from
+    :func:`estimate_dinv_rho` at build time.
     """
     matvecs = [make_matvec(lev.idx, lev.val, matvec_impl, tile_n)
                for lev in hier.levels]
+    smoothers = [
+        make_chebyshev_smoother(mv, lev.diag,
+                                estimate_dinv_rho(mv, lev.diag),
+                                degree=degree)
+        for mv, lev in zip(matvecs, hier.levels)]
 
     def coarse_solve(r):
         if hier.coarse_chol is None:  # single-vertex coarse graph
@@ -100,13 +176,12 @@ def make_vcycle(hier: Hierarchy, *, omega: float = 2.0 / 3.0,
         if l == len(hier.levels):
             return coarse_solve(r)
         lev = hier.levels[l]
-        mv = matvecs[l]
-        d = lev.diag[:, None]
-        z = omega * r / d                                   # pre-smooth
+        mv, smooth = matvecs[l], smoothers[l]
+        z = smooth(r)                                       # pre-smooth
         rc = jax.ops.segment_sum(r - mv(z), lev.agg,        # restrict
                                  num_segments=lev.n_coarse)
         z = z + cycle(l + 1, rc)[lev.agg]                   # coarse correct
-        return z + omega * (r - mv(z)) / d                  # post-smooth
+        return smooth(r, z)                                 # post-smooth
 
     def msolve(r):
         return _center(cycle(0, r))

@@ -17,17 +17,38 @@ scale past a few thousand vertices.
 Every level stores its Laplacian in the ELL [n, L] slab layout of
 ``kernels/spmv_ell.py`` so the per-level matvecs route through the same
 Pallas kernel as the outer PCG loop.
+
+Contraction runs in one of two modes (``build_hierarchy(contraction=...)``):
+
+  * ``"device"`` (default) — a jit'd heavy-edge propose/accept matching
+    with heaviest-neighbor absorption, composed from the
+    :mod:`repro.core.graph_ops` primitives and operating on the
+    sparsifier's :class:`DeviceGraph` end to end.  No per-edge host Python
+    loops anywhere; the only host materializations per level are the
+    coalesced coarse edge list (one vectorized ``build_graph`` to seed the
+    next level's pipeline run) and, at the bottom, the dense coarse
+    Cholesky factor.
+  * ``"host"`` — the original sequential greedy matching over numpy
+    arrays, kept as the parity oracle.  Both modes follow the same strict
+    (weight, -edge id) total order, so they produce the *identical*
+    clustering — the device path is the host path with its serial data
+    dependencies replaced by propose/accept rounds, exactly the pdGRASS
+    move applied to the hierarchy build.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.device_graph import DeviceGraph
 from repro.core.graph import Graph, build_graph
+from repro.core.graph_ops import (coalesce_edges, propose_accept_matching,
+                                  segment_argmax)
 from repro.pipeline import Pipeline, PipelineConfig, pdgrass_config
 
 
@@ -84,11 +105,16 @@ def subgraph(g: Graph, edge_mask: np.ndarray) -> Graph:
 
 
 def heavy_edge_matching(g: Graph) -> np.ndarray:
-    """Greedy maximal matching preferring heavy edges.
+    """Greedy maximal matching preferring heavy edges (host parity oracle).
 
     Returns ``mate[v]`` = matched partner of v, or -1.  Heavy edges are the
     spectrally important ones (they dominate the Laplacian quadratic form),
     so collapsing them first keeps the coarse graph spectrally close.
+
+    The serving path uses :func:`device_matching` — the propose/accept
+    reformulation of this exact scan (same strict total order, same
+    matching); this sequential version stays as the reference that the
+    device path is tested against.
     """
     order = np.argsort(-g.weight, kind="stable")
     mate = np.full(g.n, -1, dtype=np.int64)
@@ -107,7 +133,8 @@ def heavy_edge_matching(g: Graph) -> np.ndarray:
 
 def contract(g: Graph) -> Tuple[np.ndarray, Graph]:
     """Contract a heavy-edge matching into clusters: returns (agg [n] ->
-    coarse id, coarse graph).
+    coarse id, coarse graph).  Host parity oracle for
+    :func:`device_contract`.
 
     Matched pairs seed the clusters; every unmatched vertex then joins its
     heaviest neighbor's cluster (the matching is maximal, so every neighbor
@@ -147,6 +174,65 @@ def contract(g: Graph) -> Tuple[np.ndarray, Graph]:
     return agg.astype(np.int32), coarse
 
 
+@functools.partial(jax.jit, static_argnums=0)
+def _device_contract_arrays(n: int, src, dst, weight):
+    """jit'd matching + clustering + edge coalesce over flat device arrays.
+
+    Returns ``(mate, agg, n_pairs, csrc, cdst, cw, m_coarse)`` — all device
+    arrays, shapes static in (n, m); only ``n_pairs``/``m_coarse`` are read
+    back (they are shapes of the next level, necessarily concrete).
+    """
+    m = src.shape[0]
+    verts = jnp.arange(n, dtype=jnp.int32)
+    mate = propose_accept_matching(n, src, dst, weight)
+    matched = mate >= 0
+    # Matched pairs seed the clusters, numbered by their lower endpoint —
+    # the same order the host oracle assigns.
+    is_lo = matched & (verts < mate)
+    pid = jnp.cumsum(is_lo.astype(jnp.int32)) - 1
+    pair_of = jnp.where(is_lo, pid, pid[jnp.where(matched, mate, 0)])
+    pair_of = jnp.where(matched, pair_of, -1)
+    # Unmatched vertices absorb into their heaviest neighbor's cluster
+    # (maximal matching => that neighbor is matched).  The concat layout
+    # [src-side | dst-side] makes the default element-index tie-break
+    # reproduce the host CSR slot order exactly.
+    heads = jnp.concatenate([src, dst])
+    tails = jnp.concatenate([dst, src])
+    w2 = jnp.concatenate([weight, weight])
+    pick, _ = segment_argmax(w2, heads, n)
+    target = tails[jnp.where(pick < 2 * m, pick, 0)]
+    agg = jnp.where(matched, pair_of, pair_of[target])
+    csrc, cdst, cw, m_coarse = coalesce_edges(src, dst, weight, agg, n)
+    return mate, agg, is_lo.sum(), csrc, cdst, cw, m_coarse
+
+
+def device_matching(dg: DeviceGraph) -> jnp.ndarray:
+    """Heavy-edge maximal matching on the device; ``mate[v]`` int32 or -1.
+
+    Propose/accept rounds under the strict (weight, -edge id) total order —
+    bit-for-bit equal to :func:`heavy_edge_matching` on the same graph.
+    """
+    return propose_accept_matching(dg.n, dg.src, dg.dst, dg.weight)
+
+
+def device_contract(dg: DeviceGraph) -> Tuple[jnp.ndarray, Graph]:
+    """Device counterpart of :func:`contract`: (agg [n] device int32, coarse
+    host Graph).
+
+    Matching, cluster aggregation and edge relabel+coalesce all run inside
+    one jit'd function of flat device arrays; the host only slices the
+    coalesced coarse edge list (already unique and canonical) to build the
+    next level's :class:`Graph` — a vectorized ``build_graph``, no per-edge
+    Python loops.
+    """
+    _, agg, n_pairs, csrc, cdst, cw, m_coarse = _device_contract_arrays(
+        dg.n, dg.src, dg.dst, dg.weight)
+    nc, mc = int(n_pairs), int(m_coarse)
+    coarse = build_graph(nc, np.asarray(csrc[:mc]), np.asarray(cdst[:mc]),
+                         np.asarray(cw[:mc]))
+    return agg, coarse
+
+
 def _laplacian_diag(g: Graph) -> np.ndarray:
     deg = np.zeros(g.n, dtype=np.float64)
     np.add.at(deg, g.src, g.weight)
@@ -174,6 +260,7 @@ def build_hierarchy(
     coarse_n: int = 64,
     max_levels: int = 16,
     chunk: int = 512,
+    contraction: str = "device",
     **pdgrass_kwargs,
 ) -> Hierarchy:
     """Sparsify/contract recursively until the graph fits a dense coarse solve.
@@ -186,7 +273,18 @@ def build_hierarchy(
     by heavy-edge matching to produce the next level's graph.  Vertex counts
     shrink by the matching ratio (~2x on meshes) every level, so the chain
     has O(log n) levels and O(m) total edges.
+
+    ``contraction`` selects the matching/contraction implementation:
+    ``"device"`` (default) runs the jit'd propose/accept path of
+    :func:`device_contract` on the sparsifier's :class:`DeviceGraph`;
+    ``"host"`` runs the sequential greedy oracle :func:`contract`.  Both
+    follow the same strict total order and produce the same clustering —
+    the host path exists for parity testing and as the no-JAX fallback.
     """
+    if contraction not in ("device", "host"):
+        raise ValueError(
+            f"unknown contraction mode {contraction!r}; "
+            f"want 'device' or 'host'")
     if config is None:
         config = pdgrass_config(alpha=alpha, chunk=chunk, **pdgrass_kwargs)
     pipe = Pipeline(config)
@@ -198,25 +296,34 @@ def build_hierarchy(
         m_off = g.m - (g.n - 1)
         if m_off > 0:
             sp = pipe.run(g)
-            sg = subgraph(g, sp.edge_mask)
+            edge_mask = sp.edge_mask
             dg = sp.device_graph
         else:
-            sg = g  # already a tree — nothing to sparsify away
+            edge_mask = None  # already a tree — nothing to sparsify away
             dg = DeviceGraph.from_graph(g)
-        agg, coarse = contract(sg)
+        if contraction == "device":
+            agg_dev, coarse = device_contract(dg)
+            m_sparsifier = dg.m
+        else:
+            sg = subgraph(g, edge_mask) if edge_mask is not None else g
+            agg_host, coarse = contract(sg)
+            agg_dev = jnp.asarray(agg_host)
+            m_sparsifier = sg.m
         if coarse.n >= g.n:  # no progress — stop rather than loop
             break
         idx, val = dg.to_ell()
         lev_stats = {
-            "n": g.n, "m": g.m, "m_sparsifier": sg.m,
+            "n": g.n, "m": g.m, "m_sparsifier": m_sparsifier,
             "n_coarse": coarse.n, "shrink": coarse.n / g.n,
+            "contraction": contraction,
         }
         levels.append(Level(
             n=g.n, idx=idx, val=val, diag=dg.diag,
-            agg=jnp.asarray(agg), n_coarse=coarse.n, stats=lev_stats,
+            agg=agg_dev, n_coarse=coarse.n, stats=lev_stats,
         ))
         g = coarse
     coarse_stats = {"n": g.n, "m": g.m, "m_sparsifier": g.m,
-                    "n_coarse": g.n, "shrink": 1.0}
+                    "n_coarse": g.n, "shrink": 1.0,
+                    "contraction": contraction}
     return Hierarchy(levels=tuple(levels), coarse_n=g.n,
                      coarse_chol=_grounded_chol(g), coarse_stats=coarse_stats)

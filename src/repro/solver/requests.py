@@ -16,6 +16,9 @@ Three ideas, one module:
     the v1 per-flush list indices), expose ``done()`` / ``result()``, and
     subclass ``int`` so v1 code that indexed the flush dict with the bare
     ticket keeps working unchanged.
+  * :class:`AdmissionError` — raised by ``submit`` when a bounded scheduler
+    (``SolverService(max_pending_columns=...)``) is over budget; callers
+    back off or ``flush()`` and retry, instead of queueing unboundedly.
 """
 from __future__ import annotations
 
@@ -112,6 +115,24 @@ class GraphStore:
     def stats(self) -> dict:
         return {"graphs": len(self._handles),
                 "hash_events": self.hash_events}
+
+
+class AdmissionError(RuntimeError):
+    """A submit was rejected because the scheduler's pending-column budget
+    (``SolverService(max_pending_columns=...)``) would be exceeded.
+
+    Carries the shape of the decision: ``pending`` columns already queued,
+    ``requested`` columns in the rejected submit, and the ``budget``.
+    """
+
+    def __init__(self, pending: int, requested: int, budget: int):
+        self.pending = pending
+        self.requested = requested
+        self.budget = budget
+        super().__init__(
+            f"admission rejected: {pending} column(s) pending + "
+            f"{requested} requested > max_pending_columns={budget} — "
+            f"flush() the service (or raise the budget) and resubmit")
 
 
 @dataclasses.dataclass

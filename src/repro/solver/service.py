@@ -35,6 +35,7 @@ import collections
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,10 +47,13 @@ from repro.solver.cache import LRUCache, artifact_key
 from repro.solver.device_pcg import (default_matvec_impl, ell_laplacian,
                                      make_solver)
 from repro.solver.hierarchy import build_hierarchy
-from repro.solver.requests import (GraphHandle, GraphStore, SolveRequest,
-                                   SolveResponse, SolveTicket)
+from repro.solver.requests import (AdmissionError, GraphHandle, GraphStore,
+                                   SolveRequest, SolveResponse, SolveTicket)
 
-_SCHEMA = "solver-v4"   # artifact schema tag: bump on layout changes
+# artifact schema tag: bump on layout changes
+# v5: device-resident hierarchy contraction (propose/accept matching) +
+#     Chebyshev-smoothed V-cycle; the contraction mode joins the key extras
+_SCHEMA = "solver-v5"
 
 
 def _next_pow2(k: int) -> int:
@@ -71,18 +75,32 @@ class SolverService:
                  matvec_impl: Optional[str] = None, tile_n: int = 256,
                  max_refine: int = 3,
                  pipeline: Optional[PipelineConfig] = None,
-                 store: Optional[GraphStore] = None):
+                 store: Optional[GraphStore] = None,
+                 contraction: str = "device",
+                 max_pending_columns: Optional[int] = None):
         """``pipeline`` selects the default sparsification pipeline backing
         the preconditioner (any family member — pdGRASS, feGRASS, custom
         stage mixes); individual requests may override it with
         ``SolveRequest(pipeline=...)``.  When omitted, a pdGRASS config is
         built from ``alpha`` (default 0.05).  Passing both is a conflict:
         alpha lives inside the config.  ``store`` shares a
-        :class:`GraphStore` between services."""
+        :class:`GraphStore` between services.
+
+        ``contraction`` selects the hierarchy-build matching path
+        (``"device"`` propose/accept rounds — the default — or ``"host"``
+        sequential oracle); it participates in the artifact fingerprint, so
+        the two modes never share cache entries.  ``max_pending_columns``
+        bounds the scheduler: a ``submit`` that would push the queued RHS
+        column count past the budget raises :class:`AdmissionError` instead
+        of growing the next flush without limit (``None`` = unbounded)."""
         if pipeline is not None and alpha is not None:
             raise ValueError(
                 "pass either alpha or pipeline, not both — alpha is "
                 "pipeline.alpha (use pipeline.replace(alpha=...))")
+        if contraction not in ("device", "host"):
+            raise ValueError(
+                f"unknown contraction mode {contraction!r}; "
+                f"want 'device' or 'host'")
         self.pipeline = (pipeline if pipeline is not None
                          else pdgrass_config(
                              alpha=0.05 if alpha is None else alpha,
@@ -90,7 +108,9 @@ class SolverService:
         self.alpha = self.pipeline.alpha
         self.precond = precond
         self.coarse_n = coarse_n
+        self.contraction = contraction
         self.max_refine = max_refine
+        self.max_pending_columns = max_pending_columns
         self.matvec_impl = matvec_impl or default_matvec_impl()
         self.tile_n = tile_n
         self.store = store if store is not None else GraphStore()
@@ -102,11 +122,19 @@ class SolverService:
             collections.OrderedDict()
         # [(ticket, handle, request)] — the scheduler's input queue
         self._pending: List[Tuple[SolveTicket, GraphHandle, SolveRequest]] = []
+        self._pending_columns = 0
         self._next_ticket = 0
+        # "submitted" counts admitted requests (rejected ones never enter
+        # the queue), so submitted/rejected is the admission split.
         self._sched = {"submitted": 0, "flushes": 0, "groups": 0,
-                       "requests_solved": 0, "group_failures": 0}
+                       "requests_solved": 0, "group_failures": 0,
+                       "rejected": 0}
+        self._warmed: set = set()   # (key, k_pad) buckets warmup has run
         self._solves_by_config: "collections.Counter[str]" = \
             collections.Counter()
+        # cumulative compile-vs-solve wall-time split (ms), see stats()
+        self._timing = {"warmup_compile_ms": 0.0, "setup_ms": 0.0,
+                        "solve_ms": 0.0}
 
     # -- graph plane ---------------------------------------------------------
 
@@ -124,7 +152,7 @@ class SolverService:
 
     def _key(self, handle: GraphHandle, config: PipelineConfig) -> str:
         return artifact_key(handle.fingerprint, config, extra=(
-            _SCHEMA, self.precond, self.coarse_n))
+            _SCHEMA, self.precond, self.coarse_n, self.contraction))
 
     def artifacts(self, graph: Union[Graph, GraphHandle],
                   key: Optional[str] = None,
@@ -142,7 +170,8 @@ class SolverService:
         def build():
             g = handle.graph
             idx, val = ell_laplacian(g)
-            hier = (build_hierarchy(g, config=config, coarse_n=self.coarse_n)
+            hier = (build_hierarchy(g, config=config, coarse_n=self.coarse_n,
+                                    contraction=self.contraction)
                     if self.precond == "hierarchy" else None)
             return idx, val, hier
 
@@ -165,21 +194,57 @@ class SolverService:
         return fn
 
     def warmup(self, graph: Union[Graph, GraphHandle],
-               configs: Optional[Sequence[PipelineConfig]] = None
-               ) -> Dict[str, str]:
+               configs: Optional[Sequence[PipelineConfig]] = None,
+               widths: Optional[Sequence[int]] = None) -> Dict[str, str]:
         """Prefetch artifacts + solver closures for ``graph`` under each
         config (default: the service-wide one) ahead of traffic.  Returns
         ``{config_digest: artifact_source}`` — "miss" means built now,
-        "mem"/"disk" mean the cache already held it."""
+        "mem"/"disk" mean the cache already held it.
+
+        ``widths`` additionally jit-warms the solve itself: for every
+        requested RHS width the corresponding power-of-two slot bucket runs
+        one zero-RHS solve (a zero column converges in zero iterations, so
+        the cost is pure XLA compilation), moving compile time out of the
+        first real flush.  The cumulative compile wall time lands in
+        ``stats()["timing"]["warmup_compile_ms"]`` — compare against
+        ``timing["solve_ms"]`` for the compile-vs-solve split."""
         handle = self.register(graph)
         sources: Dict[str, str] = {}
+        if widths is not None and any(int(w) < 1 for w in widths):
+            raise ValueError(f"widths must be >= 1, got {list(widths)}")
+        buckets = sorted({_next_pow2(int(w)) for w in (widths or ())})
         for config in (configs if configs is not None else [self.pipeline]):
             validate_config(config)
             key = self._key(handle, config)
             _, artifacts, source = self.artifacts(handle, key=key,
                                                   pipeline=config)
-            self._solver_for(key, artifacts)
+            solve = self._solver_for(key, artifacts)
             sources[config.digest()] = source
+            for k_pad in buckets:
+                # Mirror the flush call signature exactly ([n, k_pad] f32
+                # rhs, [k_pad] f32 tol, [k_pad] int32 maxiter) so the jit
+                # cache entry compiled here is the one traffic hits.
+                size_before = (solve._cache_size()
+                               if hasattr(solve, "_cache_size") else None)
+                t0 = time.perf_counter()
+                res = solve(
+                    jnp.zeros((handle.n, k_pad), jnp.float32),
+                    tol=jnp.full((k_pad,), 1e-5, jnp.float32),
+                    maxiter=jnp.full((k_pad,), 1, jnp.int32))
+                jax.block_until_ready(res.x)
+                # Book the wall time as compile only when this bucket
+                # actually compiled — a re-warmed (or traffic-compiled)
+                # bucket is a jit cache hit and must not inflate the split.
+                # Without jit cache introspection (older jax), fall back to
+                # first-warmup-per-bucket accounting (traffic-compiled
+                # buckets may then book once; re-warms never double-count).
+                compiled = (solve._cache_size() > size_before
+                            if size_before is not None
+                            else (key, k_pad) not in self._warmed)
+                if compiled:
+                    self._timing["warmup_compile_ms"] += \
+                        (time.perf_counter() - t0) * 1e3
+                self._warmed.add((key, k_pad))
         return sources
 
     # -- request plane -------------------------------------------------------
@@ -215,20 +280,34 @@ class SolverService:
 
     def submit(self, request: SolveRequest) -> SolveTicket:
         """Queue a request; returns a :class:`SolveTicket` future resolved
-        by the next flush() (or by ``ticket.result()``, which flushes)."""
+        by the next flush() (or by ``ticket.result()``, which flushes).
+
+        With ``max_pending_columns`` set, a submit whose RHS columns would
+        push the queue past the budget raises :class:`AdmissionError`
+        (counted in ``stats()["scheduler"]["rejected"]``) — backpressure
+        instead of an unbounded flush."""
         self._validate(request)
+        shape = np.shape(request.b)   # no copy — b may be device-resident
+        cols = 1 if len(shape) == 1 else int(shape[1])
+        if (self.max_pending_columns is not None
+                and self._pending_columns + cols > self.max_pending_columns):
+            self._sched["rejected"] += 1
+            raise AdmissionError(self._pending_columns, cols,
+                                 self.max_pending_columns)
         handle = self.store.register(request.graph)
         ticket = SolveTicket(self._next_ticket, service=self,
                              request=request)
         self._next_ticket += 1
         self._sched["submitted"] += 1
         self._pending.append((ticket, handle, request))
+        self._pending_columns += cols
         return ticket
 
     def flush(self) -> Dict[SolveTicket, SolveResponse]:
         """Solve everything pending — one batched PCG per distinct
         (graph, pipeline-config) group."""
         pending, self._pending = self._pending, []
+        self._pending_columns = 0
         self._sched["flushes"] += 1
         return self._solve_batch(pending)
 
@@ -259,10 +338,15 @@ class SolverService:
             "cache": self.cache.stats,
             "store": {**self.store.stats,
                       "process_hash_events": cache_mod.HASH_EVENTS},
-            "scheduler": {**self._sched, "pending": len(self._pending)},
+            "scheduler": {**self._sched, "pending": len(self._pending),
+                          "pending_columns": self._pending_columns,
+                          "max_pending_columns": self.max_pending_columns},
             "solves_by_config": dict(self._solves_by_config),
             "solvers": {"jit_closures": len(self._solvers),
                         "capacity": self.cache.capacity},
+            "hierarchy": {"contraction": self.contraction,
+                          "precond": self.precond},
+            "timing": dict(self._timing),
         }
 
     # -- scheduler -----------------------------------------------------------
@@ -391,6 +475,8 @@ class SolverService:
             if not halved:
                 break  # ... but stop once passes stall at the f32 floor
         solve_ms = (time.perf_counter() - t0) * 1e3
+        self._timing["setup_ms"] += setup_ms
+        self._timing["solve_ms"] += solve_ms
         conv = relres <= tol_col
         out: Dict[SolveTicket, SolveResponse] = {}
         for e, (ticket, _, req) in enumerate(entries):

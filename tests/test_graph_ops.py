@@ -1,0 +1,177 @@
+"""Unit tests for the reusable device primitives in repro.core.graph_ops:
+segment argmax (ties, empties, masked), handshake accepts, pointer-jumping
+convergence, label compaction, propose/accept matching vs the sequential
+oracle, and segmented edge relabel+coalesce."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import barabasi_albert, build_graph, mesh2d, star_hub
+from repro.core.graph_ops import (coalesce_edges, compact_labels, handshake,
+                                  pointer_jump, propose_accept_matching,
+                                  segment_argmax)
+from repro.solver.hierarchy import heavy_edge_matching
+
+
+# -- segment_argmax ----------------------------------------------------------
+
+def test_segment_argmax_basic_and_ties():
+    vals = jnp.asarray([1.0, 5.0, 5.0, 2.0, 7.0])
+    segs = jnp.asarray([0, 0, 0, 1, 1])
+    pick, best = segment_argmax(vals, segs, 3)
+    # segment 0: two elements tie at 5.0 -> the smaller element id wins
+    assert pick.tolist() == [1, 4, 5]          # 5 == sentinel (len(vals))
+    assert best.tolist()[:2] == [5.0, 7.0]
+    assert np.isneginf(np.asarray(best)[2])    # empty segment
+
+
+def test_segment_argmax_custom_element_ids_and_sentinel():
+    # duplicated entries (both directions of an edge) resolve to one winner
+    vals = jnp.asarray([3.0, 9.0, 3.0, 9.0])
+    segs = jnp.asarray([0, 0, 1, 1])
+    eids = jnp.asarray([0, 1, 0, 1], dtype=jnp.int32)
+    pick, _ = segment_argmax(vals, segs, 2, element_ids=eids, sentinel=7)
+    assert pick.tolist() == [1, 1]
+    # all -inf (masked-out) segment gets the sentinel
+    pick, _ = segment_argmax(jnp.asarray([-jnp.inf, -jnp.inf]),
+                             jnp.asarray([0, 0]), 2, sentinel=9)
+    assert pick.tolist() == [9, 9]
+
+
+def test_segment_argmax_sentinel_below_element_ids():
+    # a sentinel smaller than the ids (-1 "no pick") must not shadow winners
+    vals = jnp.asarray([3.0, 9.0])
+    segs = jnp.asarray([0, 0])
+    eids = jnp.asarray([5, 6], dtype=jnp.int32)
+    pick, best = segment_argmax(vals, segs, 2, element_ids=eids, sentinel=-1)
+    assert pick.tolist() == [6, -1]            # winner id 6; empty seg -> -1
+    assert best.tolist()[0] == 9.0
+
+
+def test_segment_argmax_drops_out_of_range_segments():
+    vals = jnp.asarray([4.0, 8.0, 6.0])
+    segs = jnp.asarray([0, -1, 1])             # -1 = padding, must be dropped
+    pick, best = segment_argmax(vals, segs, 2)
+    assert pick.tolist() == [0, 2]
+    assert best.tolist() == [4.0, 6.0]
+
+
+# -- handshake ---------------------------------------------------------------
+
+def test_handshake_requires_mutual_proposal():
+    src = jnp.asarray([0, 1, 2])
+    dst = jnp.asarray([1, 2, 3])
+    # 0 and 1 both propose edge 0; 2 proposes edge 2 but 3 proposes nothing
+    prop = jnp.asarray([0, 0, 2, 3])
+    assert handshake(prop, src, dst).tolist() == [True, False, False]
+
+
+# -- pointer_jump ------------------------------------------------------------
+
+def test_pointer_jump_collapses_chains_and_keeps_roots():
+    # chain 4 -> 3 -> 2 -> 1 -> 0, plus two self-rooted singletons
+    parent = jnp.asarray([0, 0, 1, 2, 3, 5, 6])
+    roots = pointer_jump(parent)
+    assert roots.tolist() == [0, 0, 0, 0, 0, 5, 6]
+    flat = jnp.asarray([1, 1, 1])
+    assert pointer_jump(flat).tolist() == [1, 1, 1]
+
+
+# -- compact_labels ----------------------------------------------------------
+
+def test_compact_labels_dense_and_order_preserving():
+    labels = jnp.asarray([7, 2, 7, 9, 2])
+    dense, k = compact_labels(labels, 10)
+    assert int(k) == 3
+    assert dense.tolist() == [1, 0, 1, 2, 0]   # 2 < 7 < 9 order preserved
+
+
+def test_compact_labels_singleton_and_uniform():
+    dense, k = compact_labels(jnp.asarray([4]), 8)
+    assert (dense.tolist(), int(k)) == ([0], 1)
+    dense, k = compact_labels(jnp.asarray([3, 3, 3]), 5)
+    assert (dense.tolist(), int(k)) == ([0, 0, 0], 1)
+
+
+# -- propose_accept_matching -------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda: mesh2d(13, 13, seed=2),
+    lambda: barabasi_albert(250, 3, seed=3),
+    lambda: star_hub(200, extra=150, seed=5),
+])
+def test_matching_equals_sequential_greedy_oracle(make):
+    g = make()
+    mate = np.asarray(propose_accept_matching(
+        g.n, jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weight)))
+    np.testing.assert_array_equal(mate, heavy_edge_matching(g))
+
+
+def test_matching_tie_break_matches_oracle_on_equal_weights():
+    # every weight identical: the (weight, -edge id) order is pure edge id
+    g = build_graph(6, [0, 1, 2, 3, 4, 0], [1, 2, 3, 4, 5, 5],
+                    np.ones(6, np.float32))
+    mate = np.asarray(propose_accept_matching(
+        g.n, jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weight)))
+    np.testing.assert_array_equal(mate, heavy_edge_matching(g))
+
+
+def test_matching_is_valid_and_maximal():
+    g = mesh2d(9, 9, seed=7)
+    mate = np.asarray(propose_accept_matching(
+        g.n, jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weight)))
+    matched = mate >= 0
+    # involution: mate[mate[v]] == v for matched vertices
+    np.testing.assert_array_equal(mate[mate[matched]],
+                                  np.flatnonzero(matched))
+    # matched pairs are actual edges
+    edges = set(zip(g.src.tolist(), g.dst.tolist()))
+    for v in np.flatnonzero(matched & (np.arange(g.n) < mate)):
+        assert (v, mate[v]) in edges
+    # maximal: no edge has both endpoints free
+    free = ~matched
+    assert not np.any(free[g.src] & free[g.dst])
+
+
+# -- coalesce_edges ----------------------------------------------------------
+
+def _coalesce_ref(src, dst, w, labels):
+    agg = {}
+    for s, d, wt in zip(labels[src], labels[dst], w):
+        if s == d:
+            continue
+        key = (min(s, d), max(s, d))
+        agg[key] = agg.get(key, 0.0) + float(wt)
+    return agg
+
+
+def test_coalesce_matches_reference_on_random_labeling():
+    g = mesh2d(8, 8, seed=4)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 20, size=g.n)
+    csrc, cdst, cw, mc = coalesce_edges(
+        jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weight),
+        jnp.asarray(labels), 20)
+    mc = int(mc)
+    got = {(int(s), int(d)): float(w)
+           for s, d, w in zip(np.asarray(csrc[:mc]), np.asarray(cdst[:mc]),
+                              np.asarray(cw[:mc]))}
+    want = _coalesce_ref(g.src, g.dst, g.weight, labels)
+    assert set(got) == set(want)
+    for key in want:
+        assert np.isclose(got[key], want[key], rtol=1e-5)
+    # canonical: src < dst, sorted lexicographically
+    pairs = list(got)
+    assert all(s < d for s, d in pairs)
+    assert pairs == sorted(pairs)
+
+
+def test_coalesce_all_intra_cluster_yields_empty():
+    g = mesh2d(4, 4, seed=1)
+    labels = jnp.zeros((g.n,), jnp.int32)      # one big cluster
+    _, _, cw, mc = coalesce_edges(
+        jnp.asarray(g.src), jnp.asarray(g.dst), jnp.asarray(g.weight),
+        labels, 1)
+    assert int(mc) == 0
+    assert float(jnp.abs(cw).sum()) == 0.0
