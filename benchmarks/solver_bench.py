@@ -25,8 +25,17 @@ contraction modes (``host`` sequential greedy matching vs the default
 same chain shape (depth, per-level sizes) — the parity check runs in CI
 through ``--quick``.
 
+``--sharded`` adds a **mesh-sharded solve row**: a ``SolverService(mesh=)``
+over every visible device (row-sharded PCG + V-cycle + sharded hierarchy
+contraction) timed against the same traffic, with solution parity asserted
+against the single-device path (re-based solutions within atol, iteration
+counts within +-2).  CI runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
     PYTHONPATH=src python benchmarks/solver_bench.py [--scale small] [--k 8]
     PYTHONPATH=src python benchmarks/solver_bench.py --quick
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/solver_bench.py --quick --sharded
 """
 import argparse
 import os
@@ -103,7 +112,48 @@ def hierarchy_build_row(name, g, cfg):
           f"depth={h_dev.depth} levels={h_dev.level_sizes}")
 
 
-def bench_graph(name, g, k=8, repeat=3):
+def sharded_solve_row(name, g, B, pd_cfg, ref, repeat=1):
+    """Time the mesh-sharded solve plane over every visible device and
+    assert solution parity against the single-device path.
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+    exercise real collectives; on one device the mesh is (1,) and the row
+    degenerates to a layout check.  Parity contract (same as the tier-1
+    suite): re-based solutions within atol, per-column iteration counts
+    within +-2.
+    """
+    import jax
+    from repro.launch.mesh import compat_make_mesh
+
+    mesh = compat_make_mesh((jax.device_count(),), ("data",))
+    svc = SolverService(pipeline=pd_cfg, mesh=mesh)
+    handle = svc.register(g)
+    t0 = time.perf_counter()
+    cold = svc.solve(handle, B)
+    t_cold = time.perf_counter() - t0
+    t_warm, warm = timeit(svc.solve, handle, B, repeat=repeat)
+    assert warm.cache == "mem" and warm.converged, (name, "sharded")
+
+    def rebase(x):
+        x = np.asarray(x, np.float64)
+        return x - x[0]
+
+    np.testing.assert_allclose(rebase(warm.x), rebase(ref.x), atol=1e-4,
+                               err_msg=f"{name}: sharded solve drifted "
+                                       f"from the single-device path")
+    d_it = np.abs(np.asarray(warm.iters, np.int64)
+                  - np.asarray(ref.iters, np.int64)).max()
+    assert d_it <= 2, (
+        f"{name}: sharded iteration counts drifted by {d_it} (> 2) "
+        f"from the single-device path")
+    k = B.shape[1]
+    print(f"  sharded ({jax.device_count()} dev) cold={t_cold:6.1f}s  warm="
+          f"{t_warm * 1e3 / k:8.2f} ms/rhs   iters={int(warm.iters.max()):<5d}"
+          f" relres={float(warm.relres.max()):.1e}  parity_vs_1dev=OK "
+          f"(d_iters<={int(d_it)})")
+
+
+def bench_graph(name, g, k=8, repeat=3, sharded=False):
     rng = np.random.default_rng(0)
     B = rng.standard_normal((g.n, k)).astype(np.float32)
     B -= B.mean(axis=0)
@@ -118,6 +168,7 @@ def bench_graph(name, g, k=8, repeat=3):
     handle = svc_hier.register(g)   # content hash paid once, reused below
     svc_none.register(handle)
     rows = []
+    warm_by_tag = {}
     for tag, svc, pipeline in [
             ("dev", svc_none, None),
             ("dev+hier:pd", svc_hier, None),
@@ -128,6 +179,7 @@ def bench_graph(name, g, k=8, repeat=3):
         t_warm, warm = timeit(svc.solve, handle, B, pipeline=pipeline,
                               repeat=repeat)
         assert warm.cache == "mem" and warm.converged, (name, tag)
+        warm_by_tag[tag] = warm
         rows.append({
             "tag": tag,
             "cold_s": t_cold,
@@ -152,6 +204,9 @@ def bench_graph(name, g, k=8, repeat=3):
           f"{pd_r['iters']} vs {fe_r['iters']}, warm "
           f"{pd_r['warm_ms_per_rhs']:.2f} vs "
           f"{fe_r['warm_ms_per_rhs']:.2f} ms/rhs")
+    if sharded:
+        sharded_solve_row(name, g, B, pd_cfg, warm_by_tag["dev+hier:pd"],
+                          repeat=repeat)
     t_mixed, groups = mixed_config_flush(svc_hier, handle, B, pd_cfg, fe_cfg)
     stats = svc_hier.stats()
     print(f"  mixed flush (pd+fe):  {t_mixed*1e3:8.1f} ms for k={k} RHS in "
@@ -171,6 +226,12 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=8, help="RHS batch width")
     ap.add_argument("--quick", action="store_true",
                     help="tiny graphs, k=2 — smoke-test the code path")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add a mesh-sharded solve row over every visible "
+                         "device (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 for "
+                         "real collectives) asserting parity vs the "
+                         "single-device path")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -194,7 +255,8 @@ def main(argv=None):
         }
         k, repeat = args.k, 3
 
-    speedups = [bench_graph(name, g, k=k, repeat=repeat)
+    speedups = [bench_graph(name, g, k=k, repeat=repeat,
+                            sharded=args.sharded)
                 for name, g in graphs.items()]
     print(f"\ncached+jit'd device PCG beats the per-call host path on every "
           f"graph (best-path speedups: "

@@ -11,6 +11,11 @@ content hash -> GraphHandle), warm the artifact cache, submit ticket
 futures — optionally with per-request PipelineConfig overrides — and flush;
 the scheduler batches each (graph, config) group into one device solve.
 
+Single-device here; ``SolverService(mesh=...)`` moves the same request
+plane onto a device mesh (row-sharded PCG + V-cycle, mesh-contracted
+hierarchy) — see ``examples/distributed_sparsify.py`` for the one-mesh
+end-to-end flow.
+
     PYTHONPATH=src python examples/solve_laplacian.py [--scale medium]
 """
 import argparse

@@ -31,15 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.5 exposes shard_map at the top level
-    _shard_map = jax.shard_map
-except AttributeError:
-    from jax.experimental.shard_map import shard_map as _exp_shard_map
-
-    def _shard_map(f, **kw):
-        # the experimental version can't prove replication across while_loop
-        # bodies; the engines are replication-safe by construction.
-        return _exp_shard_map(f, check_rep=False, **kw)
+from repro.core.graph_ops import shard_map_compat as _shard_map
 
 from repro.core import recovery as rec_mod
 from repro.core.recovery import (STATUS_OPEN, STATUS_RECOVERED,
@@ -50,6 +42,29 @@ from repro.core.recovery import (STATUS_OPEN, STATUS_RECOVERED,
 # ---------------------------------------------------------------------------
 # Host-side partitioning (outer parallelism)
 # ---------------------------------------------------------------------------
+
+def pad_fill_value(dtype, *, lowest: bool = False):
+    """Per-dtype sentinel for padding slots in the shard builders.
+
+    ``lowest=True`` asks for the most-negative representable value (the
+    "never wins an argmax" encoding for score arrays): ``-inf`` for floats,
+    ``iinfo.min`` for signed integers.  ``lowest=False`` asks for the
+    conventional ``-1`` invalid marker (checked via ``x >= 0`` downstream).
+    Unsigned integers cannot represent either sentinel — ``np.full`` would
+    silently wrap ``-1`` to the *maximum*, turning padding into live data —
+    so they are rejected loudly.
+    """
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.floating):
+        return -np.inf if lowest else dtype.type(-1.0)
+    if np.issubdtype(dtype, np.unsignedinteger):
+        raise TypeError(
+            f"cannot pad unsigned dtype {dtype}: the -1/-inf sentinels "
+            f"would wrap to live values — use a signed or float array")
+    if np.issubdtype(dtype, np.integer):
+        return np.iinfo(dtype).min if lowest else dtype.type(-1)
+    raise TypeError(f"no pad sentinel for dtype {dtype}")
+
 
 def partition_subtasks(sizes: np.ndarray, n_shards: int,
                        cutoff: int | None = None,
@@ -107,8 +122,9 @@ def build_outer_shards(problem: RecoveryProblem, seg_sizes: np.ndarray,
         int(np.ceil(sum(len(r) for r in rows) / chunk)) * chunk
         for rows in rows_per_shard])
 
-    def gather(x, fill):
+    def gather(x, *, lowest=False):
         x = np.asarray(x)
+        fill = pad_fill_value(x.dtype, lowest=lowest)
         out = np.full((n_shards, m_loc) + x.shape[1:], fill, dtype=x.dtype)
         for sh, rows in enumerate(rows_per_shard):
             if rows:
@@ -122,11 +138,11 @@ def build_outer_shards(problem: RecoveryProblem, seg_sizes: np.ndarray,
             idx = np.concatenate(rows)
             src_row[sh, : idx.shape[0]] = idx
     return ShardedProblem(
-        sig_u=gather(problem.sig_u, -1),
-        sig_v=gather(problem.sig_v, -1),
-        beta=gather(problem.beta, -1),
-        seg=gather(problem.seg, -1),
-        score=gather(problem.score, -np.inf),
+        sig_u=gather(problem.sig_u),
+        sig_v=gather(problem.sig_v),
+        beta=gather(problem.beta),
+        seg=gather(problem.seg),
+        score=gather(problem.score, lowest=True),
         src_row=jnp.asarray(src_row),
     )
 
@@ -160,19 +176,24 @@ def recover_outer(sharded: ShardedProblem, mesh, axis: str = "data",
 # Inner engine: one giant subtask sharded across devices
 # ---------------------------------------------------------------------------
 
-def _inner_round_engine(sig_u, sig_v, beta, seg, axis: str,
+def _inner_round_engine(sig_u, sig_v, beta, seg, axis: str, n_sh: int,
                         block_size: int, chunk: int):
     """Round engine for one segment sharded over ``axis``.
 
     Local shapes: sig_u/sig_v [m_loc, c1]; beta/seg [m_loc].
     One all_gather of candidate rows per round; psum for termination.
+
+    ``n_sh`` is the *static* shard count along ``axis``, supplied by the
+    :func:`recover_inner` wrapper (which reads ``mesh.shape[axis]``).  It
+    must be static: the engine builds ``jnp.arange(n_sh)`` and reshapes
+    gathered blocks by it, neither of which traces from a dynamic value.
+    (A ``jax.lax.psum(1, axis)`` fallback — used before jax grew
+    ``jax.lax.axis_size`` — yields a *traced* value on those builds and
+    broke exactly there.)
     """
     m_loc = seg.shape[0]
     c1 = sig_u.shape[1]
     B = block_size
-    # jax.lax.axis_size only exists on newer jax; psum of 1 is equivalent.
-    n_sh = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
-            else jax.lax.psum(1, axis))
     my = jax.lax.axis_index(axis)
     is_edge = seg >= 0
     status0 = jnp.where(is_edge, STATUS_OPEN, STATUS_SKIPPED).astype(jnp.int8)
@@ -259,9 +280,13 @@ def _inner_round_engine(sig_u, sig_v, beta, seg, axis: str,
 
 def recover_inner(sig_u, sig_v, beta, seg, mesh, axis: str = "data",
                   block_size: int = 32, chunk: int = 2048):
-    """shard_map wrapper for one giant segment sharded over ``axis``."""
+    """shard_map wrapper for one giant segment sharded over ``axis``.
+
+    The wrapper knows the mesh, so the shard count goes in as a static
+    Python int — the engine never derives it from collectives."""
     fn = _shard_map(
         functools.partial(_inner_round_engine, axis=axis,
+                          n_sh=int(mesh.shape[axis]),
                           block_size=block_size, chunk=chunk),
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis), P(axis)),
@@ -301,15 +326,16 @@ def recover_mixed(prepared, mesh, axis: str = "data",
         m_tot = m_loc * n_shards
         sl = slice(st, st + sz)
 
-        def pad(x, fill):
+        def pad(x):
             x = np.asarray(x[sl])
-            out = np.full((m_tot,) + x.shape[1:], fill, dtype=x.dtype)
+            out = np.full((m_tot,) + x.shape[1:],
+                          pad_fill_value(x.dtype), dtype=x.dtype)
             out[:sz] = x
             return jnp.asarray(out)
 
         status, _ = recover_inner(
-            pad(np.asarray(prob.sig_u), -1), pad(np.asarray(prob.sig_v), -1),
-            pad(np.asarray(prob.beta), -1), pad(seg_np, -1),
+            pad(np.asarray(prob.sig_u)), pad(np.asarray(prob.sig_v)),
+            pad(np.asarray(prob.beta)), pad(seg_np),
             mesh, axis=axis, block_size=max(block_size, 32), chunk=chunk)
         status_global[sl] = np.asarray(status)[:sz]
 

@@ -27,6 +27,19 @@ same handful of flat-array primitives, collected here:
 Everything here is shape-static ``jnp`` scatter/gather/sort work: safe
 under ``jit``, free of host round-trips, and padded with explicit
 sentinels rather than dynamic shapes.
+
+Mesh-aware variants (for bodies running under ``shard_map`` with the
+edge arrays row-sharded over a named axis) sit beside their single-device
+counterparts: :func:`sharded_segment_argmax` combines per-shard argmaxes
+with a ``pmax``/``pmin`` pair under the same (value, min element-id) total
+order, :func:`sharded_matching` is :func:`propose_accept_matching` with
+its per-round segment sweep distributed, and :func:`sharded_coalesce_edges`
+is a two-phase (local combine, ``all_gather``, final merge) contraction.
+All three are *bit-identical* to the single-device primitives on the same
+input — the strict total order survives the collectives — which is what
+lets the sharded hierarchy build serve as a drop-in for the device one.
+:func:`shard_map_compat` is the version-portable ``shard_map`` entry point
+every mesh consumer in the repo shares.
 """
 from __future__ import annotations
 
@@ -34,6 +47,16 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+try:  # jax >= 0.5 exposes shard_map at the top level
+    shard_map_compat = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map_compat(f, **kw):
+        # the experimental version can't prove replication across
+        # while_loop bodies; callers are replication-safe by construction.
+        return _exp_shard_map(f, check_rep=False, **kw)
 
 
 def segment_argmax(values: jnp.ndarray, segment_ids: jnp.ndarray,
@@ -202,3 +225,109 @@ def coalesce_edges(src: jnp.ndarray, dst: jnp.ndarray, weight: jnp.ndarray,
     csrc = jnp.zeros((m,), jnp.int32).at[first_uid].set(lo_s, mode="drop")
     cdst = jnp.zeros((m,), jnp.int32).at[first_uid].set(hi_s, mode="drop")
     return csrc, cdst, cw, first.sum()
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware variants: same semantics, edges row-sharded over a named axis.
+# Every function below runs INSIDE a shard_map body; its array arguments are
+# the local shard slices and its outputs are replicated across the axis.
+# ---------------------------------------------------------------------------
+
+def sharded_segment_argmax(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                           num_segments: int, *, axis: str,
+                           element_ids: jnp.ndarray,
+                           sentinel: Optional[int] = None,
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`segment_argmax` with the elements sharded over mesh ``axis``.
+
+    Each shard reduces its local elements, then two collectives combine the
+    shards under the same (value, minimal element id) total order: a
+    ``pmax`` settles the per-segment best value, a ``pmin`` over the element
+    ids that attain it settles the winner.  ``element_ids`` is mandatory and
+    must carry *global* ids (unique across shards) — local ``arange`` ids
+    would collide between shards and corrupt the tie-break.  The result is
+    replicated: every shard holds the full ``[num_segments]`` pick/best.
+    """
+    big = jnp.iinfo(element_ids.dtype).max
+    pick_l, best_l = segment_argmax(values, segment_ids, num_segments,
+                                    element_ids=element_ids, sentinel=big)
+    best = jax.lax.pmax(best_l, axis)
+    cand = jnp.where((best_l == best) & (best > -jnp.inf), pick_l, big)
+    pick = jax.lax.pmin(cand, axis)
+    if sentinel is None:
+        sentinel = big
+    return jnp.where(pick == big, sentinel, pick), best
+
+
+def sharded_matching(n: int, src: jnp.ndarray, dst: jnp.ndarray,
+                     weight: jnp.ndarray, edge_ids: jnp.ndarray, *,
+                     axis: str) -> jnp.ndarray:
+    """:func:`propose_accept_matching` with the edge list sharded over
+    ``axis``; returns the replicated ``[n]`` ``mate`` array.
+
+    ``edge_ids`` carries the global edge id of every local slot, ``-1`` for
+    padding (shards are padded to equal length).  Each round the proposal
+    sweep runs as a :func:`sharded_segment_argmax` (one ``pmax`` + one
+    ``pmin``), every shard tests the handshake on its own edges, and the
+    accepted writes merge with a ``pmax`` (accepted edges are vertex-
+    disjoint across the *whole* mesh, so at most one shard writes a
+    vertex).  The strict (weight, -edge id) total order is preserved end to
+    end, so the matching is bit-identical to the single-device rounds and
+    therefore to the sequential greedy oracle.
+    """
+    valid = edge_ids >= 0
+    heads = jnp.concatenate([src, dst])
+    eids2 = jnp.concatenate([edge_ids, edge_ids])
+    w2 = jnp.concatenate([weight, weight])
+    big = jnp.iinfo(jnp.int32).max
+
+    def body(state):
+        mate, _ = state
+        free = mate < 0
+        alive = valid & free[src] & free[dst]
+        alive2 = jnp.concatenate([alive, alive])
+        vals = jnp.where(alive2, w2, -jnp.inf)
+        prop, _ = sharded_segment_argmax(vals, heads, n, axis=axis,
+                                         element_ids=eids2, sentinel=big)
+        accept = alive & (prop[src] == edge_ids) & (prop[dst] == edge_ids)
+        upd = jnp.full((n,), -1, jnp.int32)
+        upd = upd.at[jnp.where(accept, src, n)].set(
+            jnp.where(accept, dst, 0), mode="drop")
+        upd = upd.at[jnp.where(accept, dst, n)].set(
+            jnp.where(accept, src, 0), mode="drop")
+        upd = jax.lax.pmax(upd, axis)
+        mate = jnp.where(upd >= 0, upd, mate)
+        n_alive = jax.lax.psum(jnp.sum(alive.astype(jnp.int32)), axis)
+        return mate, n_alive > 0
+
+    mate0 = jnp.full((n,), -1, dtype=jnp.int32)
+    mate, _ = jax.lax.while_loop(lambda s: s[1], body,
+                                 (mate0, jnp.bool_(True)))
+    return mate
+
+
+def sharded_coalesce_edges(src: jnp.ndarray, dst: jnp.ndarray,
+                           weight: jnp.ndarray, labels: jnp.ndarray,
+                           num_labels: int, *, axis: str
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                      jnp.ndarray]:
+    """:func:`coalesce_edges` with the edge list sharded over ``axis``.
+
+    Two phases, the classic combiner/reduce split: every shard coalesces
+    its *local* slice first (one local lexsort — this is where parallel
+    duplicates within a shard collapse), then one ``all_gather`` of the
+    locally-merged lists feeds a final replicated merge.  Padding slots
+    (``src == dst``) drop in phase one.  Output layout matches
+    :func:`coalesce_edges` over the gathered length ``n_sh * m_loc``:
+    canonical, sorted, first ``m_coarse`` entries valid — replicated on
+    every shard.  Coarse weights equal the single-device result up to f32
+    summation order (partial sums happen per shard first).
+    """
+    csrc, cdst, cw, _ = coalesce_edges(src, dst, weight, labels, num_labels)
+    g_src = jax.lax.all_gather(csrc, axis, tiled=True)
+    g_dst = jax.lax.all_gather(cdst, axis, tiled=True)
+    g_w = jax.lax.all_gather(cw, axis, tiled=True)
+    # phase two relabels through the identity: entries are already coarse
+    # ids; empty slots came out of phase one as (0, 0) and drop again.
+    ident = jnp.arange(num_labels, dtype=jnp.int32)
+    return coalesce_edges(g_src, g_dst, g_w, ident, num_labels)

@@ -11,6 +11,10 @@ The first real *consumer* subsystem of the pdGRASS pipeline.  Five layers:
     routes through the Pallas ELL kernel and whose preconditioner applies the
     hierarchy via forward/backward tree sweeps (symmetric V-cycle with
     Chebyshev polynomial smoothing).
+  * :mod:`repro.solver.sharded`    — the same PCG + V-cycle row-sharded
+    under ``shard_map`` on a device mesh (halo matvec, psum reductions,
+    replicated coarse solve), behind ``make_solver(mesh=...)`` /
+    ``SolverService(mesh=...)``.
   * :mod:`repro.solver.cache`      — content-hash-keyed sparsifier/hierarchy
     cache (in-memory LRU + bounded on-disk tier) so repeated solves on the
     same graph skip pipeline steps 1-4 entirely.
@@ -28,16 +32,17 @@ from repro.solver.device_pcg import (BatchedPCGResult, batched_pcg,
                                      make_vcycle)
 from repro.solver.hierarchy import (Hierarchy, Level, build_hierarchy,
                                     device_contract, device_matching,
-                                    subgraph)
+                                    sharded_contract, subgraph)
 from repro.solver.requests import (AdmissionError, GraphHandle, GraphStore,
                                    SolveRequest, SolveResponse, SolveTicket)
 from repro.solver.service import SolverService
+from repro.solver.sharded import make_sharded_solver, shard_ell_slabs
 
 __all__ = [
     "Hierarchy", "Level", "build_hierarchy", "subgraph",
-    "device_contract", "device_matching",
+    "device_contract", "device_matching", "sharded_contract",
     "BatchedPCGResult", "batched_pcg", "ell_laplacian", "make_matvec",
-    "make_solver", "make_vcycle",
+    "make_solver", "make_vcycle", "make_sharded_solver", "shard_ell_slabs",
     "LRUCache", "artifact_key", "content_fingerprint", "graph_fingerprint",
     "pipeline_fingerprint",
     "AdmissionError", "GraphHandle", "GraphStore", "SolveRequest",

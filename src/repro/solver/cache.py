@@ -81,6 +81,22 @@ def graph_fingerprint(graph: Graph, extra: tuple = ()) -> str:
     return h.hexdigest()
 
 
+def mesh_descriptor(mesh, shard_axis: str):
+    """Stable, hashable description of a solve mesh for artifact keying.
+
+    The artifacts themselves (ELL slabs, hierarchy chain) are
+    mesh-independent, but the *solver closures* built from them are not —
+    and a restarted service on a different mesh must not adopt cache
+    entries whose recorded parity guarantees were established under
+    another shard count.  Keying by (axis name, axis size) is exactly the
+    information that changes the sharded program; ``None`` (single-device)
+    keys separately from every mesh.
+    """
+    if mesh is None:
+        return None
+    return ("mesh", str(shard_axis), int(mesh.shape[shard_axis]))
+
+
 def artifact_key(content_fp: str, config, extra: tuple = ()) -> str:
     """Cache key from an already-computed content digest + PipelineConfig.
 

@@ -199,6 +199,70 @@ def make_jacobi(diag) -> Callable:
     return msolve
 
 
+def _pcg_loop(matvec: Callable, b, msolve: Callable, tol, maxiter,
+              colsum: Callable, center: Callable) -> BatchedPCGResult:
+    """The one batched-PCG ``lax.while_loop``, parameterized over its
+    reductions so the single-device and mesh-sharded planes share it.
+
+    ``colsum(v) -> [k]`` sums a ``[rows, k]`` array over rows (plain
+    ``jnp.sum`` on one device; local partial sum + ``psum`` under
+    ``shard_map``) and ``center`` projects out the Laplacian nullspace.
+    Everything else — per-column alpha/beta with converged columns frozen,
+    the ``tol_inner = 0.5 * tol`` target, the periodic van der Vorst
+    residual replacement — is identical by construction, which is what the
+    sharded plane's iteration-count parity contract (counts within ±2 of
+    the single-device solver) rests on.
+    """
+    k = b.shape[1]
+    bnorm = jnp.sqrt(colsum(b * b))
+    bn = jnp.maximum(bnorm, jnp.finfo(b.dtype).tiny)
+    maxiter = jnp.broadcast_to(jnp.asarray(maxiter, jnp.int32), (k,))
+    # The loop tracks the *recurrence* residual, which drifts away from the
+    # true residual in f32.  Two defenses so the reported true relres
+    # (recomputed at the end) still meets the caller's target: aim below tol,
+    # and periodically replace the recurrence residual with the true one
+    # (van der Vorst-style residual replacement).
+    tol_inner = 0.5 * tol
+    replace_every = 50
+
+    x0 = jnp.zeros_like(b)
+    z0 = msolve(b)
+    rz0 = colsum(b * z0)
+    done0 = (bnorm <= 0) | (maxiter <= 0)
+    iters0 = jnp.zeros((k,), jnp.int32)
+    state = (x0, b, z0, rz0, iters0, done0, jnp.int32(0))
+
+    def cond(s):
+        _, _, _, _, _, done, it = s
+        return jnp.any(~done) & (it < jnp.max(maxiter))
+
+    def body(s):
+        x, r, p, rz, iters, done, it = s
+        active = ~done
+        Ap = matvec(p)
+        pAp = colsum(p * Ap)
+        alpha = jnp.where(active, rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        r = jax.lax.cond((it + 1) % replace_every == 0,
+                         lambda: b - matvec(x), lambda: r)
+        relres = jnp.sqrt(colsum(r * r)) / bn
+        iters = iters + active.astype(jnp.int32)
+        done = done | (relres <= tol_inner) | (iters >= maxiter)
+        z = msolve(r)
+        rz_new = colsum(r * z)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = jnp.where(active, z + beta * p, p)
+        rz = jnp.where(active, rz_new, rz)
+        return x, r, p, rz, iters, done, it + 1
+
+    x, _, _, _, iters, _, _ = jax.lax.while_loop(cond, body, state)
+    x = center(x)
+    relres = jnp.sqrt(colsum((b - matvec(x)) ** 2)) / bn  # true residual
+    return BatchedPCGResult(x=x, iters=iters, relres=relres,
+                            converged=relres <= tol)
+
+
 def batched_pcg(matvec: Callable, b, msolve: Optional[Callable] = None,
                 tol=1e-5, maxiter=2000) -> BatchedPCGResult:
     """PCG over a ``[n, k]`` RHS batch in one ``lax.while_loop``.
@@ -213,65 +277,39 @@ def batched_pcg(matvec: Callable, b, msolve: Optional[Callable] = None,
     """
     if msolve is None:
         msolve = lambda r: r  # noqa: E731
-    n, k = b.shape
-    bnorm = jnp.linalg.norm(b, axis=0)
-    bn = jnp.maximum(bnorm, jnp.finfo(b.dtype).tiny)
-    maxiter = jnp.broadcast_to(jnp.asarray(maxiter, jnp.int32), (k,))
-    # The loop tracks the *recurrence* residual, which drifts away from the
-    # true residual in f32.  Two defenses so the reported true relres
-    # (recomputed at the end) still meets the caller's target: aim below tol,
-    # and periodically replace the recurrence residual with the true one
-    # (van der Vorst-style residual replacement).
-    tol_inner = 0.5 * tol
-    replace_every = 50
-
-    x0 = jnp.zeros_like(b)
-    z0 = msolve(b)
-    rz0 = jnp.sum(b * z0, axis=0)
-    done0 = (bnorm <= 0) | (maxiter <= 0)
-    iters0 = jnp.zeros((k,), jnp.int32)
-    state = (x0, b, z0, rz0, iters0, done0, jnp.int32(0))
-
-    def cond(s):
-        _, _, _, _, _, done, it = s
-        return jnp.any(~done) & (it < jnp.max(maxiter))
-
-    def body(s):
-        x, r, p, rz, iters, done, it = s
-        active = ~done
-        Ap = matvec(p)
-        pAp = jnp.sum(p * Ap, axis=0)
-        alpha = jnp.where(active, rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        r = jax.lax.cond((it + 1) % replace_every == 0,
-                         lambda: b - matvec(x), lambda: r)
-        relres = jnp.linalg.norm(r, axis=0) / bn
-        iters = iters + active.astype(jnp.int32)
-        done = done | (relres <= tol_inner) | (iters >= maxiter)
-        z = msolve(r)
-        rz_new = jnp.sum(r * z, axis=0)
-        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
-        p = jnp.where(active, z + beta * p, p)
-        rz = jnp.where(active, rz_new, rz)
-        return x, r, p, rz, iters, done, it + 1
-
-    x, _, _, _, iters, _, _ = jax.lax.while_loop(cond, body, state)
-    x = _center(x)
-    relres = jnp.linalg.norm(b - matvec(x), axis=0) / bn  # true residual
-    return BatchedPCGResult(x=x, iters=iters, relres=relres,
-                            converged=relres <= tol)
+    return _pcg_loop(matvec, b, msolve, tol, maxiter,
+                     colsum=lambda v: jnp.sum(v, axis=0), center=_center)
 
 
 def make_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
                 precond: str = "hierarchy", matvec_impl: Optional[str] = None,
-                tile_n: int = 256) -> Callable:
+                tile_n: int = 256, mesh=None,
+                shard_axis: str = "data") -> Callable:
     """Build the jit'd end-to-end solve ``(b [n, k], tol, maxiter) -> result``.
 
     ``precond``: "hierarchy" (V-cycle over ``hierarchy``), "jacobi", or
     "none".  The returned function is a plain ``jax.jit`` closure — callers
     (the service) cache it per graph so repeated solves pay zero setup.
+
+    ``mesh`` switches to the mesh-sharded plane: the ELL slabs (top level
+    and every hierarchy level) are row-sharded over ``shard_axis`` and the
+    whole PCG + V-cycle runs under ``shard_map`` — see
+    :mod:`repro.solver.sharded`.  The returned closure keeps this exact
+    signature and global-array contract either way.
     """
+    if mesh is not None:
+        if matvec_impl == "kernel":
+            import warnings
+            warnings.warn(
+                "matvec_impl='kernel' is ignored on the sharded path: each "
+                "shard's ELL slab is contracted with the jnp reference "
+                "matvec under shard_map (the Pallas kernel is a "
+                "single-device code path)", stacklevel=2)
+        # local import: sharded builds on this module's smoother/estimator
+        from repro.solver.sharded import make_sharded_solver
+        return make_sharded_solver(idx, val, hierarchy=hierarchy,
+                                   precond=precond, mesh=mesh,
+                                   shard_axis=shard_axis)
     if matvec_impl is None:
         matvec_impl = default_matvec_impl()
     matvec = make_matvec(idx, val, matvec_impl, tile_n)

@@ -44,11 +44,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.device_graph import DeviceGraph
 from repro.core.graph import Graph, build_graph
 from repro.core.graph_ops import (coalesce_edges, propose_accept_matching,
-                                  segment_argmax)
+                                  segment_argmax, shard_map_compat,
+                                  sharded_coalesce_edges, sharded_matching,
+                                  sharded_segment_argmax)
 from repro.pipeline import Pipeline, PipelineConfig, pdgrass_config
 
 
@@ -233,6 +236,95 @@ def device_contract(dg: DeviceGraph) -> Tuple[jnp.ndarray, Graph]:
     return agg, coarse
 
 
+def _sharded_contract_core(n: int, m_total: int, axis: str):
+    """Build the shard_map body for one contraction round: matching +
+    clustering + two-phase coalesce, edges sharded over ``axis``.
+
+    Local args are the shard's edge slice (``eids`` global edge ids, -1 on
+    padding; padding slots carry ``src == dst == 0`` so the coalesce drops
+    them).  Outputs are replicated.  The clustering math is the replicated
+    [n]-array mirror of :func:`_device_contract_arrays` — same pair
+    numbering, same concat slot order for the absorption tie-break — so the
+    sharded rounds produce the *identical* agg the device (and host) paths
+    do.
+    """
+
+    def fn(src, dst, weight, eids):
+        verts = jnp.arange(n, dtype=jnp.int32)
+        valid = eids >= 0
+        mate = sharded_matching(n, src, dst, weight, eids, axis=axis)
+        matched = mate >= 0
+        is_lo = matched & (verts < mate)
+        pid = jnp.cumsum(is_lo.astype(jnp.int32)) - 1
+        pair_of = jnp.where(is_lo, pid, pid[jnp.where(matched, mate, 0)])
+        pair_of = jnp.where(matched, pair_of, -1)
+        # Unmatched vertices absorb into their heaviest neighbor's cluster.
+        # Global slot ids reproduce the device path's [src-side | dst-side]
+        # concat layout: src-side slot of edge e is e, dst-side is
+        # m_total + e — the pmin tie-break then matches the element-index
+        # tie-break of the single-device segment_argmax exactly.
+        heads = jnp.concatenate([src, dst])
+        tails = jnp.concatenate([dst, src])
+        slots = jnp.concatenate(
+            [eids, jnp.where(valid, eids + m_total, -1)])
+        w2 = jnp.where(jnp.concatenate([valid, valid]),
+                       jnp.concatenate([weight, weight]), -jnp.inf)
+        big = jnp.iinfo(jnp.int32).max
+        pick, _ = sharded_segment_argmax(w2, heads, n, axis=axis,
+                                         element_ids=slots, sentinel=big)
+        # resolve tails[pick] across shards: the shard owning the winning
+        # slot scatters its tail; pmax merges (one winner per vertex).
+        won = (slots >= 0) & (pick[heads] == slots)
+        tgt = jnp.full((n,), -1, jnp.int32).at[
+            jnp.where(won, heads, n)].set(
+            jnp.where(won, tails, 0), mode="drop")
+        tgt = jax.lax.pmax(tgt, axis)
+        agg = jnp.where(matched, pair_of,
+                        pair_of[jnp.where(tgt >= 0, tgt, 0)])
+        csrc, cdst, cw, m_coarse = sharded_coalesce_edges(
+            src, dst, weight, agg, n, axis=axis)
+        return mate, agg, is_lo.sum(), csrc, cdst, cw, m_coarse
+
+    return fn
+
+
+def sharded_contract(dg: DeviceGraph, mesh, axis: str = "data"
+                     ) -> Tuple[jnp.ndarray, Graph]:
+    """Mesh-sharded counterpart of :func:`device_contract`: the
+    propose/accept rounds run under ``shard_map`` with the edge list
+    row-sharded over ``axis``.
+
+    Returns ``(agg [n] replicated device int32, coarse host Graph)`` — the
+    identical clustering the device path produces (the strict total order
+    survives the collectives), with coarse weights equal up to f32 sum
+    order (the two-phase coalesce sums per shard first).
+    """
+    n_sh = int(mesh.shape[axis])
+    m = dg.m
+    m_loc = max(1, -(-m // n_sh))
+    m_pad = m_loc * n_sh
+
+    def pad(x, fill, dtype):
+        out = np.full((m_pad,), fill, dtype)
+        out[:m] = np.asarray(x)
+        return jnp.asarray(out)
+
+    src_p = pad(dg.src, 0, np.int32)
+    dst_p = pad(dg.dst, 0, np.int32)
+    w_p = pad(dg.weight, 0.0, np.float32)
+    eids = pad(np.arange(m, dtype=np.int32), -1, np.int32)
+
+    fn = shard_map_compat(
+        _sharded_contract_core(dg.n, m, axis), mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P(), P(), P(), P(), P(), P()))
+    _, agg, n_pairs, csrc, cdst, cw, m_coarse = fn(src_p, dst_p, w_p, eids)
+    nc, mc = int(n_pairs), int(m_coarse)
+    coarse = build_graph(nc, np.asarray(csrc[:mc]), np.asarray(cdst[:mc]),
+                         np.asarray(cw[:mc]))
+    return agg, coarse
+
+
 def _laplacian_diag(g: Graph) -> np.ndarray:
     deg = np.zeros(g.n, dtype=np.float64)
     np.add.at(deg, g.src, g.weight)
@@ -261,6 +353,8 @@ def build_hierarchy(
     max_levels: int = 16,
     chunk: int = 512,
     contraction: str = "device",
+    mesh=None,
+    shard_axis: str = "data",
     **pdgrass_kwargs,
 ) -> Hierarchy:
     """Sparsify/contract recursively until the graph fits a dense coarse solve.
@@ -277,14 +371,21 @@ def build_hierarchy(
     ``contraction`` selects the matching/contraction implementation:
     ``"device"`` (default) runs the jit'd propose/accept path of
     :func:`device_contract` on the sparsifier's :class:`DeviceGraph`;
-    ``"host"`` runs the sequential greedy oracle :func:`contract`.  Both
-    follow the same strict total order and produce the same clustering —
-    the host path exists for parity testing and as the no-JAX fallback.
+    ``"host"`` runs the sequential greedy oracle :func:`contract`;
+    ``"sharded"`` runs :func:`sharded_contract` — the propose/accept
+    rounds under ``shard_map`` with the edge list sharded over
+    ``mesh``/``shard_axis`` (required for this mode).  All three follow
+    the same strict total order and produce the same clustering — the host
+    path exists for parity testing and as the no-JAX fallback; the sharded
+    path is what lets a 1e6+-vertex build compose with the distributed
+    solve on one mesh.
     """
-    if contraction not in ("device", "host"):
+    if contraction not in ("device", "host", "sharded"):
         raise ValueError(
             f"unknown contraction mode {contraction!r}; "
-            f"want 'device' or 'host'")
+            f"want 'device', 'host' or 'sharded'")
+    if contraction == "sharded" and mesh is None:
+        raise ValueError("contraction='sharded' needs a mesh")
     if config is None:
         config = pdgrass_config(alpha=alpha, chunk=chunk, **pdgrass_kwargs)
     pipe = Pipeline(config)
@@ -303,6 +404,9 @@ def build_hierarchy(
             dg = DeviceGraph.from_graph(g)
         if contraction == "device":
             agg_dev, coarse = device_contract(dg)
+            m_sparsifier = dg.m
+        elif contraction == "sharded":
+            agg_dev, coarse = sharded_contract(dg, mesh, axis=shard_axis)
             m_sparsifier = dg.m
         else:
             sg = subgraph(g, edge_mask) if edge_mask is not None else g

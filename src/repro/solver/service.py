@@ -43,7 +43,7 @@ from repro.core.graph import Graph
 from repro.pipeline import PipelineConfig, pdgrass_config
 from repro.pipeline import validate as validate_config
 from repro.solver import cache as cache_mod
-from repro.solver.cache import LRUCache, artifact_key
+from repro.solver.cache import LRUCache, artifact_key, mesh_descriptor
 from repro.solver.device_pcg import (default_matvec_impl, ell_laplacian,
                                      make_solver)
 from repro.solver.hierarchy import build_hierarchy
@@ -53,7 +53,11 @@ from repro.solver.requests import (AdmissionError, GraphHandle, GraphStore,
 # artifact schema tag: bump on layout changes
 # v5: device-resident hierarchy contraction (propose/accept matching) +
 #     Chebyshev-smoothed V-cycle; the contraction mode joins the key extras
-_SCHEMA = "solver-v5"
+# v6: mesh-sharded solve plane — the mesh descriptor (axis name, shard
+#     count; None when single-device) joins the key extras, and
+#     contraction="sharded" is a distinct mode.  v5 on-disk entries miss
+#     cleanly and rebuild.
+_SCHEMA = "solver-v6"
 
 
 def _next_pow2(k: int) -> int:
@@ -76,8 +80,9 @@ class SolverService:
                  max_refine: int = 3,
                  pipeline: Optional[PipelineConfig] = None,
                  store: Optional[GraphStore] = None,
-                 contraction: str = "device",
-                 max_pending_columns: Optional[int] = None):
+                 contraction: Optional[str] = None,
+                 max_pending_columns: Optional[int] = None,
+                 mesh=None, shard_axis: str = "data"):
         """``pipeline`` selects the default sparsification pipeline backing
         the preconditioner (any family member — pdGRASS, feGRASS, custom
         stage mixes); individual requests may override it with
@@ -87,20 +92,40 @@ class SolverService:
         :class:`GraphStore` between services.
 
         ``contraction`` selects the hierarchy-build matching path
-        (``"device"`` propose/accept rounds — the default — or ``"host"``
-        sequential oracle); it participates in the artifact fingerprint, so
-        the two modes never share cache entries.  ``max_pending_columns``
-        bounds the scheduler: a ``submit`` that would push the queued RHS
-        column count past the budget raises :class:`AdmissionError` instead
-        of growing the next flush without limit (``None`` = unbounded)."""
+        (``"device"`` propose/accept rounds, ``"host"`` sequential oracle,
+        or ``"sharded"`` mesh-distributed rounds); it participates in the
+        artifact fingerprint, so the modes never share cache entries.
+        ``max_pending_columns`` bounds the scheduler: a ``submit`` that
+        would push the queued RHS column count past the budget raises
+        :class:`AdmissionError` instead of growing the next flush without
+        limit (``None`` = unbounded).
+
+        ``mesh`` switches the whole solve plane onto a device mesh: the
+        hierarchy build contracts with mesh-sharded propose/accept rounds
+        (``contraction`` defaults to ``"sharded"``), and the batched PCG +
+        V-cycle run row-sharded under ``shard_map`` over ``shard_axis``
+        (see :mod:`repro.solver.sharded`).  The mesh descriptor joins the
+        artifact cache key (schema v6), so single-device and sharded
+        artifacts never alias."""
         if pipeline is not None and alpha is not None:
             raise ValueError(
                 "pass either alpha or pipeline, not both — alpha is "
                 "pipeline.alpha (use pipeline.replace(alpha=...))")
-        if contraction not in ("device", "host"):
+        if contraction is None:
+            contraction = "sharded" if mesh is not None else "device"
+        if contraction not in ("device", "host", "sharded"):
             raise ValueError(
                 f"unknown contraction mode {contraction!r}; "
-                f"want 'device' or 'host'")
+                f"want 'device', 'host' or 'sharded'")
+        if contraction == "sharded" and mesh is None:
+            raise ValueError("contraction='sharded' needs a mesh")
+        if mesh is not None and precond == "jacobi":
+            # fail at construction, not first flush: the sharded plane
+            # supports 'hierarchy' and 'none' (jacobi is a single-device
+            # comparison baseline)
+            raise NotImplementedError(
+                "precond='jacobi' is not supported with mesh= — "
+                "use precond='hierarchy' or 'none'")
         self.pipeline = (pipeline if pipeline is not None
                          else pdgrass_config(
                              alpha=0.05 if alpha is None else alpha,
@@ -109,6 +134,8 @@ class SolverService:
         self.precond = precond
         self.coarse_n = coarse_n
         self.contraction = contraction
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         self.max_refine = max_refine
         self.max_pending_columns = max_pending_columns
         self.matvec_impl = matvec_impl or default_matvec_impl()
@@ -152,7 +179,8 @@ class SolverService:
 
     def _key(self, handle: GraphHandle, config: PipelineConfig) -> str:
         return artifact_key(handle.fingerprint, config, extra=(
-            _SCHEMA, self.precond, self.coarse_n, self.contraction))
+            _SCHEMA, self.precond, self.coarse_n, self.contraction,
+            mesh_descriptor(self.mesh, self.shard_axis)))
 
     def artifacts(self, graph: Union[Graph, GraphHandle],
                   key: Optional[str] = None,
@@ -171,7 +199,9 @@ class SolverService:
             g = handle.graph
             idx, val = ell_laplacian(g)
             hier = (build_hierarchy(g, config=config, coarse_n=self.coarse_n,
-                                    contraction=self.contraction)
+                                    contraction=self.contraction,
+                                    mesh=self.mesh,
+                                    shard_axis=self.shard_axis)
                     if self.precond == "hierarchy" else None)
             return idx, val, hier
 
@@ -186,7 +216,8 @@ class SolverService:
         if fn is None:
             idx, val, hier = artifacts
             fn = make_solver(idx, val, hierarchy=hier, precond=self.precond,
-                             matvec_impl=self.matvec_impl, tile_n=self.tile_n)
+                             matvec_impl=self.matvec_impl, tile_n=self.tile_n,
+                             mesh=self.mesh, shard_axis=self.shard_axis)
             self._solvers[key] = fn
         self._solvers.move_to_end(key)
         while len(self._solvers) > self.cache.capacity:
@@ -346,6 +377,8 @@ class SolverService:
                         "capacity": self.cache.capacity},
             "hierarchy": {"contraction": self.contraction,
                           "precond": self.precond},
+            "mesh": {"descriptor": mesh_descriptor(self.mesh,
+                                                   self.shard_axis)},
             "timing": dict(self._timing),
         }
 
@@ -418,12 +451,14 @@ class SolverService:
         B -= B.mean(axis=0)
         # Per-column tolerance and iteration budget: each request keeps
         # its own contract even when batched with stricter/larger
-        # neighbors (pad columns inherit the group extremes; their zero
-        # RHS converges instantly regardless).
+        # neighbors.  Padding columns are inert BY CONSTRUCTION — tol=inf
+        # and maxiter=0 mean they can never drive batched_pcg's while-loop
+        # (done from iteration zero) nor the refinement pass (zero
+        # remaining budget, relres 0 <= inf), independent of the separate
+        # zero-RHS short-circuit.
         reqs = [req for _, _, req in entries]
-        tol_col = np.full(k_pad, min(r.tol for r in reqs))
-        maxiter_col = np.full(k_pad, max(r.maxiter for r in reqs),
-                              np.int32)
+        tol_col = np.full(k_pad, np.inf)
+        maxiter_col = np.zeros(k_pad, np.int32)
         for j, (e, _) in enumerate(owner):
             tol_col[j] = reqs[e].tol
             maxiter_col[j] = reqs[e].maxiter

@@ -289,6 +289,52 @@ def test_config_digest_is_stable_and_discriminating():
     assert len(pd.digest()) == 12
 
 
+# -- slot-batch padding invariant --------------------------------------------
+
+def test_padded_batch_columns_are_inert_by_construction():
+    """Padding columns carry tol=inf / maxiter=0, so they can never drive
+    the batched PCG loop (0 iterations from the start) nor the refinement
+    pass — independent of the zero-RHS short-circuit.  Previously pads
+    inherited the group's *strictest* tol and *largest* maxiter, which was
+    only benign by accident."""
+    g = mesh2d(9, 9, seed=40)
+    svc = SolverService(alpha=0.05, precond="none")
+    h = svc.register(g)
+    inner = {}
+    real_solver_for = svc._solver_for
+
+    def spying(key, artifacts):
+        fn = real_solver_for(key, artifacts)
+
+        def spy(b, tol=1e-5, maxiter=2000):
+            res = fn(b, tol=tol, maxiter=maxiter)
+            # capture the FIRST (main) solve call; refinement passes reuse
+            # the closure with per-column remaining budgets
+            inner.setdefault("tol", np.asarray(tol))
+            inner.setdefault("maxiter", np.asarray(maxiter))
+            inner.setdefault("iters", np.asarray(res.iters))
+            return res
+
+        return spy
+
+    svc._solver_for = spying
+    b = _rhs(g, k=3, seed=41)
+    # three 1-column requests with distinct contracts -> k=3, k_pad=4
+    tickets = [svc.submit(SolveRequest(graph=h, b=b[:, j], tol=t, maxiter=m))
+               for j, (t, m) in enumerate([(1e-5, 2000), (1e-3, 50),
+                                           (1e-6, 3000)])]
+    out = svc.flush()
+    assert all(out[t].converged for t in tickets)
+    # the real columns kept their own contracts ...
+    assert np.allclose(inner["tol"][:3],
+                       np.maximum([1e-5, 1e-3, 1e-6], 1e-5))
+    assert list(inner["maxiter"][:3]) == [2000, 50, 3000]
+    # ... and the padding column is inert: tol=inf, maxiter=0, 0 iterations
+    assert np.isinf(inner["tol"][3])
+    assert inner["maxiter"][3] == 0
+    assert inner["iters"][3] == 0
+
+
 # -- bounded disk tier -------------------------------------------------------
 
 def _disk_keys(path):
