@@ -1,9 +1,14 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 
 import numpy as np
+
+BENCH_SCHEMA = "bench-v1"
 
 
 def timeit(fn, *args, repeat: int = 3, **kw):
@@ -19,3 +24,44 @@ def timeit(fn, *args, repeat: int = 3, **kw):
 
 def csv_row(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def git_sha() -> str:
+    """HEAD commit of the repo this file lives in; "unknown" outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def _jsonable(v):
+    """numpy scalars/arrays -> plain python; last-resort repr for the rest."""
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, np.generic):
+        return v.item()
+    return repr(v)
+
+
+def write_bench_json(path: str, bench: str, records, extra: dict = None):
+    """Machine-readable bench results: ``{schema, bench, git_sha,
+    created_unix, records}``.  ``records`` is whatever row structure the
+    bench produced (lists/dicts of numbers); numpy values serialize as
+    plain JSON numbers/lists."""
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "bench": bench,
+        "git_sha": git_sha(),
+        "created_unix": time.time(),
+        "records": records,
+    }
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=_jsonable)
+    print(f"wrote {path}")

@@ -35,11 +35,23 @@ def main(argv=None) -> None:
     ap.add_argument("--skip", action="append", default=[],
                     help="section name to skip (repeatable) — e.g. CI runs "
                          "solver_bench as its own fail-fast step")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable harness results "
+                         "(per-section runtimes + embedded solver_bench "
+                         "detail, schema bench-v1 with git SHA)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable span tracing for the whole run and export "
+                         "a Chrome trace-event JSON")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig1_summary, kernels_bench, pdgrass_perf,
                             solver_bench, table2_quality, table3_jbp,
                             table4_scaling)
+    from benchmarks.common import write_bench_json
+
+    if args.trace:
+        from repro.obs import enable_tracing
+        enable_tracing()
 
     sections = [
         ("table2_quality", table2_quality.main),
@@ -51,14 +63,41 @@ def main(argv=None) -> None:
         ("solver_bench", solver_bench.main),
     ]
     section_argv = ["--quick"] if args.smoke else []
+    solver_json = None
+    if args.json:
+        # solver_bench writes its own detail record; embed it in ours
+        solver_json = args.json + ".solver_bench.tmp"
+    section_runtimes = {}
     for name, fn in sections:
         if name in args.skip:
             print(f"\n=== {name} === (skipped)")
             continue
         print(f"\n=== {name} ===")
+        extra_argv = (["--json", solver_json]
+                      if solver_json and name == "solver_bench" else [])
         t0 = time.perf_counter()
-        fn(section_argv)
-        print(f"# section_runtime,{(time.perf_counter()-t0)*1e6:.0f},{name}")
+        fn(section_argv + extra_argv)
+        dt = time.perf_counter() - t0
+        section_runtimes[name] = dt
+        print(f"# section_runtime,{dt*1e6:.0f},{name}")
+
+    if args.json:
+        import json as json_mod
+        detail = None
+        if solver_json and os.path.exists(solver_json):
+            with open(solver_json) as f:
+                detail = json_mod.load(f)
+            os.remove(solver_json)
+        write_bench_json(
+            args.json, "run",
+            {"section_runtimes_s": section_runtimes,
+             "skipped": args.skip, "solver_bench": detail},
+            extra={"smoke": args.smoke})
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().export_chrome(args.trace)
+        print(f"wrote {args.trace} "
+              f"({len(get_tracer().events())} span events)")
 
 
 if __name__ == "__main__":

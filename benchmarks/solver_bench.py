@@ -45,7 +45,7 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.common import timeit  # noqa: E402
+from benchmarks.common import timeit, write_bench_json  # noqa: E402
 
 from repro.core import barabasi_albert, mesh2d, pdgrass  # noqa: E402
 from repro.core.pcg import pcg_host  # noqa: E402
@@ -110,6 +110,9 @@ def hierarchy_build_row(name, g, cfg):
     print(f"  hier build:   host={t_host*1e3:8.1f} ms  "
           f"device={t_dev*1e3:8.1f} ms (cold {t_dev_cold*1e3:.1f} ms)  "
           f"depth={h_dev.depth} levels={h_dev.level_sizes}")
+    return {"host_ms": t_host * 1e3, "device_ms": t_dev * 1e3,
+            "device_cold_ms": t_dev_cold * 1e3, "depth": h_dev.depth,
+            "level_sizes": list(h_dev.level_sizes)}
 
 
 def sharded_solve_row(name, g, B, pd_cfg, ref, repeat=1):
@@ -151,6 +154,10 @@ def sharded_solve_row(name, g, B, pd_cfg, ref, repeat=1):
           f"{t_warm * 1e3 / k:8.2f} ms/rhs   iters={int(warm.iters.max()):<5d}"
           f" relres={float(warm.relres.max()):.1e}  parity_vs_1dev=OK "
           f"(d_iters<={int(d_it)})")
+    return {"devices": jax.device_count(), "cold_s": t_cold,
+            "warm_ms_per_rhs": t_warm * 1e3 / k,
+            "iters": int(warm.iters.max()),
+            "relres": float(warm.relres.max()), "d_iters": int(d_it)}
 
 
 def bench_graph(name, g, k=8, repeat=3, sharded=False):
@@ -190,7 +197,7 @@ def bench_graph(name, g, k=8, repeat=3, sharded=False):
 
     host_ms = t_host * 1e3
     print(f"\n{name}: |V|={g.n} |E|={g.m}  batch k={k}")
-    hierarchy_build_row(name, g, pd_cfg)
+    hier_rec = hierarchy_build_row(name, g, pd_cfg)
     print(f"  host per-call:        {host_ms:10.1f} ms/rhs   "
           f"iters={res_host.iters}")
     for r in rows:
@@ -204,9 +211,11 @@ def bench_graph(name, g, k=8, repeat=3, sharded=False):
           f"{pd_r['iters']} vs {fe_r['iters']}, warm "
           f"{pd_r['warm_ms_per_rhs']:.2f} vs "
           f"{fe_r['warm_ms_per_rhs']:.2f} ms/rhs")
+    sharded_rec = None
     if sharded:
-        sharded_solve_row(name, g, B, pd_cfg, warm_by_tag["dev+hier:pd"],
-                          repeat=repeat)
+        sharded_rec = sharded_solve_row(name, g, B, pd_cfg,
+                                        warm_by_tag["dev+hier:pd"],
+                                        repeat=repeat)
     t_mixed, groups = mixed_config_flush(svc_hier, handle, B, pd_cfg, fe_cfg)
     stats = svc_hier.stats()
     print(f"  mixed flush (pd+fe):  {t_mixed*1e3:8.1f} ms for k={k} RHS in "
@@ -216,7 +225,18 @@ def bench_graph(name, g, k=8, repeat=3, sharded=False):
     assert warm_best < host_ms, (
         f"{name}: cached device path ({warm_best:.1f} ms/rhs) did not beat "
         f"the per-call host path ({host_ms:.1f} ms/rhs)")
-    return host_ms / warm_best
+    return {
+        "graph": name, "n": g.n, "m": g.m, "k": k,
+        "host_ms_per_rhs": host_ms,
+        "host_iters": int(res_host.iters),
+        "hierarchy_build": hier_rec,
+        "rows": rows,
+        "sharded": sharded_rec,
+        "mixed_flush_ms": t_mixed * 1e3,
+        "mixed_flush_groups": groups,
+        "convergence": stats["convergence"],
+        "speedup_best": host_ms / warm_best,
+    }
 
 
 def main(argv=None):
@@ -232,7 +252,18 @@ def main(argv=None):
                          "--xla_force_host_platform_device_count=8 for "
                          "real collectives) asserting parity vs the "
                          "single-device path")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results (schema bench-v1: "
+                         "rows, timings, iteration counts, git SHA)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable span tracing for the whole run and export "
+                         "a Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev)")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.obs import enable_tracing
+        enable_tracing()
 
     if args.quick:
         graphs = {
@@ -255,12 +286,22 @@ def main(argv=None):
         }
         k, repeat = args.k, 3
 
-    speedups = [bench_graph(name, g, k=k, repeat=repeat,
-                            sharded=args.sharded)
-                for name, g in graphs.items()]
+    records = [bench_graph(name, g, k=k, repeat=repeat,
+                           sharded=args.sharded)
+               for name, g in graphs.items()]
+    speedups = [r["speedup_best"] for r in records]
     print(f"\ncached+jit'd device PCG beats the per-call host path on every "
           f"graph (best-path speedups: "
           f"{', '.join(f'{s:.0f}x' for s in speedups)})")
+    if args.json:
+        write_bench_json(args.json, "solver_bench", records,
+                         extra={"quick": args.quick, "scale": args.scale,
+                                "k": k, "sharded": args.sharded})
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().export_chrome(args.trace)
+        print(f"wrote {args.trace} "
+              f"({len(get_tracer().events())} span events)")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.graph_ops import shard_map_compat as _shard_map
+from repro.obs import get_metrics, get_tracer
 
 from repro.core import recovery as rec_mod
 from repro.core.recovery import (STATUS_OPEN, STATUS_RECOVERED,
@@ -315,39 +316,66 @@ def recover_mixed(prepared, mesh, axis: str = "data",
     m = prob.m
     status_global = np.full(m, STATUS_SKIPPED, dtype=np.int8)
     seg_np = np.asarray(prob.seg)
+    tracer = get_tracer()
+    metrics = get_metrics()
+    metrics.inc("dist.recoveries")
+    with tracer.span("dist.recover_mixed", n_shards=n_shards,
+                     giants=len(giants), m=m) as msp:
+        # --- inner engine for each giant subtask, one at a time ---
+        starts = np.flatnonzero(
+            np.concatenate([[True], seg_np[1:] != seg_np[:-1]]))
+        start_of = {int(seg_np[s]): int(s) for s in starts if seg_np[s] >= 0}
+        inner_rounds = 0
+        for sid in giants:
+            st = start_of[sid]
+            sz = int(prepared.subtask_sizes[sid])
+            m_loc = int(np.ceil(sz / (n_shards * chunk))) * chunk
+            m_tot = m_loc * n_shards
+            sl = slice(st, st + sz)
 
-    # --- inner engine for each giant subtask, one at a time ---
-    starts = np.flatnonzero(np.concatenate([[True], seg_np[1:] != seg_np[:-1]]))
-    start_of = {int(seg_np[s]): int(s) for s in starts if seg_np[s] >= 0}
-    for sid in giants:
-        st = start_of[sid]
-        sz = int(prepared.subtask_sizes[sid])
-        m_loc = int(np.ceil(sz / (n_shards * chunk))) * chunk
-        m_tot = m_loc * n_shards
-        sl = slice(st, st + sz)
+            def pad(x):
+                x = np.asarray(x[sl])
+                out = np.full((m_tot,) + x.shape[1:],
+                              pad_fill_value(x.dtype), dtype=x.dtype)
+                out[:sz] = x
+                return jnp.asarray(out)
 
-        def pad(x):
-            x = np.asarray(x[sl])
-            out = np.full((m_tot,) + x.shape[1:],
-                          pad_fill_value(x.dtype), dtype=x.dtype)
-            out[:sz] = x
-            return jnp.asarray(out)
+            bs = max(block_size, 32)
+            with tracer.span("dist.inner", subtask=int(sid), edges=sz,
+                             m_tot=m_tot) as isp:
+                status, rounds = recover_inner(
+                    pad(np.asarray(prob.sig_u)), pad(np.asarray(prob.sig_v)),
+                    pad(np.asarray(prob.beta)), pad(seg_np),
+                    mesh, axis=axis, block_size=bs, chunk=chunk)
+                status_global[sl] = np.asarray(status)[:sz]
+                rounds = int(np.asarray(rounds).reshape(-1)[0])
+                # per-round collective payload: one all_gather of the
+                # candidate pack (two signature blocks + beta + rank) from
+                # every shard — the engine's only communication
+                c1 = int(np.asarray(prob.sig_u).shape[1])
+                pack_bytes = n_shards * bs * (2 * c1 * 4 + 4 + 4)
+                isp.set(rounds=rounds,
+                        collective_bytes=rounds * pack_bytes)
+                metrics.inc("dist.inner_rounds", rounds)
+                metrics.inc("dist.collective_bytes", rounds * pack_bytes)
+            inner_rounds += rounds
 
-        status, _ = recover_inner(
-            pad(np.asarray(prob.sig_u)), pad(np.asarray(prob.sig_v)),
-            pad(np.asarray(prob.beta)), pad(seg_np),
-            mesh, axis=axis, block_size=max(block_size, 32), chunk=chunk)
-        status_global[sl] = np.asarray(status)[:sz]
-
-    # --- outer engine for everything else ---
-    if np.any(shard_of >= 0):
-        sharded = build_outer_shards(prob, prepared.subtask_sizes, shard_of,
-                                     n_shards, chunk=chunk)
-        status, _ = recover_outer(sharded, mesh, axis=axis,
-                                  block_size=block_size,
-                                  max_candidates=max_candidates, chunk=chunk)
-        status = np.asarray(status).reshape(-1)
-        src = np.asarray(sharded.src_row).reshape(-1)
-        ok = src >= 0
-        status_global[src[ok]] = status[ok]
+        # --- outer engine for everything else ---
+        outer_rounds = 0
+        if np.any(shard_of >= 0):
+            with tracer.span("dist.outer", n_shards=n_shards) as osp:
+                sharded = build_outer_shards(prob, prepared.subtask_sizes,
+                                             shard_of, n_shards, chunk=chunk)
+                status, rounds = recover_outer(
+                    sharded, mesh, axis=axis, block_size=block_size,
+                    max_candidates=max_candidates, chunk=chunk)
+                status = np.asarray(status).reshape(-1)
+                src = np.asarray(sharded.src_row).reshape(-1)
+                ok = src >= 0
+                status_global[src[ok]] = status[ok]
+                outer_rounds = int(np.max(np.asarray(rounds))) if np.asarray(
+                    rounds).size else 0
+                osp.set(rounds=outer_rounds)
+                metrics.inc("dist.outer_rounds", outer_rounds)
+        msp.set(inner_rounds=inner_rounds, outer_rounds=outer_rounds)
     return status_global

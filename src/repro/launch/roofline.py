@@ -111,6 +111,63 @@ def analyze(compiled, n_devices: int, model_flops: float = 0.0) -> Roofline:
     return r
 
 
+# ---------------------------------------------------------------------------
+# Solver hot-loop byte/flop models (ELL spmv + multilevel V-cycle)
+# ---------------------------------------------------------------------------
+
+def ell_spmv_bytes(n: int, ell_width: int, k: int,
+                   dtype_bytes: int = 4, idx_bytes: int = 4) -> int:
+    """Minimum HBM traffic of one batched ELL spmv ``y[n,k] = A @ x[n,k]``.
+
+    Streaming model: the idx/val slabs are read once, every nonzero gathers
+    a k-wide row of x (gathers don't coalesce across rows, so x counts per
+    reference, not per unique row), and y is written once.  This is the
+    roofline floor — perfect caching of x would reduce the gather term to
+    ``n*k``, so achieved/model ratios above 1 indicate cache reuse, not
+    measurement error."""
+    slab = n * ell_width * (idx_bytes + dtype_bytes)
+    gather = n * ell_width * k * dtype_bytes
+    out = n * k * dtype_bytes
+    return slab + gather + out
+
+
+def ell_spmv_flops(n: int, ell_width: int, k: int) -> int:
+    """2 flops (mul+add) per stored entry per RHS column."""
+    return 2 * n * ell_width * k
+
+
+def vcycle_bytes(level_shapes, k: int, cheby_degree: int = 3,
+                 dtype_bytes: int = 4) -> int:
+    """HBM traffic of one V-cycle over ``level_shapes = [(n, ell_width)]``.
+
+    Per fine level, down + up sweep each run one Chebyshev smoother
+    (``cheby_degree`` spmvs) and the down sweep adds one residual spmv:
+    ``2*degree + 1`` spmvs per level per cycle, plus the restriction /
+    prolongation scatter-gathers (one k-wide read + write of the level).
+    The coarsest dense triangular solve is excluded (it is
+    compute-shaped, not stream-shaped, and tiny by construction)."""
+    total = 0
+    for n, width in level_shapes:
+        total += (2 * cheby_degree + 1) * ell_spmv_bytes(
+            n, width, k, dtype_bytes=dtype_bytes)
+        total += 2 * 2 * n * k * dtype_bytes   # restrict + prolong r/w
+    return total
+
+
+def hierarchy_level_shapes(hierarchy) -> list:
+    """[(n, ell_width)] of each fine level — feed to :func:`vcycle_bytes`."""
+    return [(int(lev.n), int(lev.idx.shape[1]))
+            for lev in hierarchy.levels]
+
+
+def achieved_bandwidth(bytes_moved: float, seconds: float) -> dict:
+    """Achieved bytes/s for a measured span + fraction of the HBM roof."""
+    if seconds <= 0:
+        return {"bytes_per_s": 0.0, "frac_of_hbm": 0.0}
+    bps = bytes_moved / seconds
+    return {"bytes_per_s": bps, "frac_of_hbm": bps / HBM_BW}
+
+
 def model_flops_estimate(params_tree, cfg, shape) -> float:
     """6*N*D (train) / 2*N*D (inference); N = *active* params for MoE."""
     import jax

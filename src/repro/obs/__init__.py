@@ -1,0 +1,30 @@
+"""Unified telemetry plane: span tracing, metrics, device annotations.
+
+Three dependency-light modules, one import surface:
+
+  * :mod:`repro.obs.trace`   — thread-safe span tracer; Chrome trace-event
+    (Perfetto) + JSONL export; near-zero-cost no-op when disabled.
+  * :mod:`repro.obs.metrics` — namespaced counters / gauges / bounded
+    latency histograms with percentile snapshots.
+  * :mod:`repro.obs.device`  — ``jax.named_scope`` / ``TraceAnnotation``
+    wrappers that put solver semantics on device timelines.
+
+Quick start (see README "Observability"):
+
+    from repro.obs import enable_tracing, get_tracer, get_metrics
+
+    enable_tracing()
+    svc.solve(g, b)
+    get_tracer().export_chrome("trace.json")   # open in ui.perfetto.dev
+    print(svc.stats()["convergence"])          # per-config PCG percentiles
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               Metrics, get_metrics)
+from repro.obs.trace import (NOOP_SPAN, Tracer, disable_tracing,  # noqa: F401
+                             enable_tracing, get_tracer, span)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metrics", "get_metrics",
+    "NOOP_SPAN", "Tracer", "get_tracer", "span",
+    "enable_tracing", "disable_tracing",
+]

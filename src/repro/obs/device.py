@@ -1,0 +1,62 @@
+"""Device-timeline annotations: semantic labels for jit'd solver internals.
+
+Host-side spans (:mod:`repro.obs.trace`) time dispatch, not device
+execution — under jit the V-cycle is one opaque XLA computation.  Two
+mechanisms put solver semantics back onto device timelines:
+
+  * :func:`named_scope` — ``jax.named_scope`` labels attach to the jaxpr /
+    HLO **at trace time** (zero runtime cost, safe inside jit and
+    ``shard_map``), so XLA profiles and HLO dumps show ``vcycle.L0.down``
+    instead of anonymous fusions.  Always on.
+  * :func:`trace_annotation` — ``jax.profiler.TraceAnnotation`` marks the
+    host thread's dispatch window in the XLA profiler timeline; gated on
+    the repro tracer being enabled so the disabled hot path stays free.
+
+Both degrade to ``contextlib.nullcontext`` when jax lacks the API (or is
+absent entirely — this keeps :mod:`repro.obs` importable everywhere).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.trace import get_tracer
+
+
+def named_scope(name: str):
+    """Trace-time name scope for ops created under it (no runtime cost)."""
+    try:
+        import jax
+        return jax.named_scope(name)
+    except Exception:
+        return contextlib.nullcontext()
+
+
+def trace_annotation(name: str):
+    """XLA-profiler host annotation around a dispatch; no-op unless the
+    repro tracer is enabled."""
+    if not get_tracer().enabled:
+        return contextlib.nullcontext()
+    try:
+        import jax
+        ta = getattr(jax.profiler, "TraceAnnotation", None)
+        return ta(name) if ta is not None else contextlib.nullcontext()
+    except Exception:
+        return contextlib.nullcontext()
+
+
+class annotated_span:
+    """A tracer span and an XLA TraceAnnotation entered/exited together —
+    the host span times the dispatch, the annotation labels the same window
+    in the device profiler."""
+
+    def __init__(self, name: str, **attrs):
+        self._span = get_tracer().span(name, **attrs)
+        self._anno = trace_annotation(name)
+
+    def __enter__(self):
+        self._anno.__enter__()
+        return self._span.__enter__()
+
+    def __exit__(self, *exc):
+        self._span.__exit__(*exc)
+        return self._anno.__exit__(*exc)

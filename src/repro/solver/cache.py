@@ -31,10 +31,12 @@ import tempfile
 from typing import Any, Callable, Optional, Tuple
 
 from repro.core.graph import Graph
+from repro.obs import Metrics, get_metrics, get_tracer
 
 # Count of O(m) content hashes actually computed (memo misses).  Tests and
 # ``SolverService.stats()`` read this to prove registered graphs are never
-# re-fingerprinted on the request path.
+# re-fingerprinted on the request path.  Mirrored into the process-wide
+# metrics registry as ``store.hash_events``.
 HASH_EVENTS = 0
 
 
@@ -54,6 +56,7 @@ def content_fingerprint(graph: Graph) -> str:
         return memo
     global HASH_EVENTS
     HASH_EVENTS += 1
+    get_metrics().inc("store.hash_events")
     h = hashlib.sha256()
     h.update(b"pdgrass-graph-v1")
     h.update(int(graph.n).to_bytes(8, "little"))
@@ -136,7 +139,8 @@ class LRUCache:
 
     def __init__(self, capacity: int = 16, disk_dir: Optional[str] = None,
                  disk_max_entries: Optional[int] = None,
-                 disk_max_bytes: Optional[int] = None):
+                 disk_max_bytes: Optional[int] = None,
+                 metrics: Optional[Metrics] = None):
         self.capacity = int(capacity)
         self.disk_dir = disk_dir
         self.disk_max_entries = disk_max_entries
@@ -147,6 +151,10 @@ class LRUCache:
         self.misses = 0
         self.evictions = 0
         self.disk_evictions = 0
+        # every legacy counter bump is mirrored into this registry under
+        # ``cache.*`` (the service passes its per-service registry so two
+        # services never share counters)
+        self.metrics = metrics if metrics is not None else get_metrics()
         if disk_dir:
             os.makedirs(disk_dir, exist_ok=True)
 
@@ -195,6 +203,7 @@ class LRUCache:
             except OSError:
                 continue
             self.disk_evictions += 1
+            self.metrics.inc("cache.disk_evictions")
             count -= 1
             total -= size
 
@@ -204,50 +213,61 @@ class LRUCache:
         while len(self._mem) > self.capacity:
             self._mem.popitem(last=False)
             self.evictions += 1
+            self.metrics.inc("cache.evictions")
 
     def get(self, key: str) -> Tuple[Any, str]:
         """(value, "mem"|"disk") or (None, "miss") without building."""
-        if key in self._mem:
-            self._mem.move_to_end(key)
-            self.hits += 1
-            return self._mem[key], "mem"
-        path = self._disk_path(key)
-        if path:
-            try:
-                with open(path, "rb") as f:
-                    value = pickle.load(f)
-            except (OSError, pickle.PickleError, EOFError, ValueError,
-                    AttributeError, ImportError):
-                # not on disk — or evicted/torn/corrupted by a concurrent
-                # process between our stat and read, or pickled against a
-                # schema this process no longer has: a miss, rebuild
-                return None, "miss"
-            try:
-                os.utime(path)  # refresh recency for oldest-mtime eviction
-            except OSError:
-                pass
-            self.disk_hits += 1
-            self._put_mem(key, value)
-            return value, "disk"
-        return None, "miss"
+        with get_tracer().span("cache.get", key=key[:12]) as sp:
+            if key in self._mem:
+                self._mem.move_to_end(key)
+                self.hits += 1
+                self.metrics.inc("cache.mem_hits")
+                sp.set(tier="mem")
+                return self._mem[key], "mem"
+            path = self._disk_path(key)
+            if path:
+                try:
+                    with open(path, "rb") as f:
+                        value = pickle.load(f)
+                except (OSError, pickle.PickleError, EOFError, ValueError,
+                        AttributeError, ImportError):
+                    # not on disk — or evicted/torn/corrupted by a concurrent
+                    # process between our stat and read, or pickled against a
+                    # schema this process no longer has: a miss, rebuild
+                    sp.set(tier="miss")
+                    return None, "miss"
+                try:
+                    os.utime(path)  # refresh recency for mtime eviction
+                except OSError:
+                    pass
+                self.disk_hits += 1
+                self.metrics.inc("cache.disk_hits")
+                self._put_mem(key, value)
+                sp.set(tier="disk")
+                return value, "disk"
+            sp.set(tier="miss")
+            return None, "miss"
 
     def put(self, key: str, value: Any) -> None:
         self._put_mem(key, value)
         path = self._disk_path(key)
         if path:
             # atomic write: never leave a torn pickle for a reader to load
-            fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
-            with os.fdopen(fd, "wb") as f:
-                pickle.dump(value, f)
-            os.replace(tmp, path)
-            self._prune_disk(keep=path)
+            with get_tracer().span("cache.put_disk", key=key[:12]):
+                fd, tmp = tempfile.mkstemp(dir=self.disk_dir, suffix=".tmp")
+                with os.fdopen(fd, "wb") as f:
+                    pickle.dump(value, f)
+                os.replace(tmp, path)
+                self._prune_disk(keep=path)
 
     def get_or_build(self, key: str, build: Callable[[], Any]) -> Tuple[Any, str]:
         value, source = self.get(key)
         if source != "miss":
             return value, source
         self.misses += 1
-        value = build()
+        self.metrics.inc("cache.misses")
+        with get_tracer().span("cache.build", key=key[:12]):
+            value = build()
         self.put(key, value)
         return value, "miss"
 

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.obs.device import named_scope
 from repro.solver.hierarchy import Hierarchy
 
 
@@ -166,22 +167,29 @@ def make_vcycle(hier: Hierarchy, *, degree: int = 2,
         for mv, lev in zip(matvecs, hier.levels)]
 
     def coarse_solve(r):
-        if hier.coarse_chol is None:  # single-vertex coarse graph
-            return jnp.zeros_like(r)
-        y = jax.scipy.linalg.cho_solve((hier.coarse_chol, True), r[1:])
-        z = jnp.concatenate([jnp.zeros_like(r[:1]), y], axis=0)
-        return _center(z)
+        with named_scope("vcycle.coarse"):
+            if hier.coarse_chol is None:  # single-vertex coarse graph
+                return jnp.zeros_like(r)
+            y = jax.scipy.linalg.cho_solve((hier.coarse_chol, True), r[1:])
+            z = jnp.concatenate([jnp.zeros_like(r[:1]), y], axis=0)
+            return _center(z)
 
+    # named_scope labels are attached at trace time (zero runtime cost):
+    # device timelines and HLO dumps show vcycle.L<l>.down/up per level
+    # instead of one anonymous fusion soup.
     def cycle(l: int, r):
         if l == len(hier.levels):
             return coarse_solve(r)
         lev = hier.levels[l]
         mv, smooth = matvecs[l], smoothers[l]
-        z = smooth(r)                                       # pre-smooth
-        rc = jax.ops.segment_sum(r - mv(z), lev.agg,        # restrict
-                                 num_segments=lev.n_coarse)
-        z = z + cycle(l + 1, rc)[lev.agg]                   # coarse correct
-        return smooth(r, z)                                 # post-smooth
+        with named_scope(f"vcycle.L{l}.down"):
+            z = smooth(r)                                   # pre-smooth
+            rc = jax.ops.segment_sum(r - mv(z), lev.agg,    # restrict
+                                     num_segments=lev.n_coarse)
+        zc = cycle(l + 1, rc)                               # coarse correct
+        with named_scope(f"vcycle.L{l}.up"):
+            z = z + zc[lev.agg]                             # prolong
+            return smooth(r, z)                             # post-smooth
 
     def msolve(r):
         return _center(cycle(0, r))
@@ -329,7 +337,8 @@ def make_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
 
     @jax.jit
     def solve(b, tol=1e-5, maxiter=2000):
-        b = _center(b)
-        return batched_pcg(matvec, b, msolve, tol=tol, maxiter=maxiter)
+        with named_scope("batched_pcg"):
+            b = _center(b)
+            return batched_pcg(matvec, b, msolve, tol=tol, maxiter=maxiter)
 
     return solve

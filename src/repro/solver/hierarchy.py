@@ -52,6 +52,8 @@ from repro.core.graph_ops import (coalesce_edges, propose_accept_matching,
                                   segment_argmax, shard_map_compat,
                                   sharded_coalesce_edges, sharded_matching,
                                   sharded_segment_argmax)
+from repro.obs import get_metrics, get_tracer
+from repro.obs.device import trace_annotation
 from repro.pipeline import Pipeline, PipelineConfig, pdgrass_config
 
 
@@ -389,45 +391,63 @@ def build_hierarchy(
     if config is None:
         config = pdgrass_config(alpha=alpha, chunk=chunk, **pdgrass_kwargs)
     pipe = Pipeline(config)
+    tracer = get_tracer()
     levels = []
     g = graph
-    for _ in range(max_levels):
-        if g.n <= coarse_n:
-            break
-        m_off = g.m - (g.n - 1)
-        if m_off > 0:
-            sp = pipe.run(g)
-            edge_mask = sp.edge_mask
-            dg = sp.device_graph
-        else:
-            edge_mask = None  # already a tree — nothing to sparsify away
-            dg = DeviceGraph.from_graph(g)
-        if contraction == "device":
-            agg_dev, coarse = device_contract(dg)
-            m_sparsifier = dg.m
-        elif contraction == "sharded":
-            agg_dev, coarse = sharded_contract(dg, mesh, axis=shard_axis)
-            m_sparsifier = dg.m
-        else:
-            sg = subgraph(g, edge_mask) if edge_mask is not None else g
-            agg_host, coarse = contract(sg)
-            agg_dev = jnp.asarray(agg_host)
-            m_sparsifier = sg.m
-        if coarse.n >= g.n:  # no progress — stop rather than loop
-            break
-        idx, val = dg.to_ell()
-        lev_stats = {
-            "n": g.n, "m": g.m, "m_sparsifier": m_sparsifier,
-            "n_coarse": coarse.n, "shrink": coarse.n / g.n,
-            "contraction": contraction,
-        }
-        levels.append(Level(
-            n=g.n, idx=idx, val=val, diag=dg.diag,
-            agg=agg_dev, n_coarse=coarse.n, stats=lev_stats,
-        ))
-        g = coarse
-    coarse_stats = {"n": g.n, "m": g.m, "m_sparsifier": g.m,
-                    "n_coarse": g.n, "shrink": 1.0,
-                    "contraction": contraction}
+    with tracer.span("hierarchy.build", contraction=contraction,
+                     n=graph.n, m=graph.m) as build_span:
+        for _ in range(max_levels):
+            if g.n <= coarse_n:
+                break
+            with tracer.span("hierarchy.level", level=len(levels),
+                             n=g.n, m=g.m) as lev_span:
+                m_off = g.m - (g.n - 1)
+                if m_off > 0:
+                    with tracer.span("hierarchy.sparsify", n=g.n, m=g.m):
+                        sp = pipe.run(g)
+                    edge_mask = sp.edge_mask
+                    dg = sp.device_graph
+                else:
+                    edge_mask = None  # already a tree — nothing to sparsify
+                    dg = DeviceGraph.from_graph(g)
+                with tracer.span("hierarchy.contract", mode=contraction), \
+                        trace_annotation(f"hierarchy.contract.{contraction}"):
+                    if contraction == "device":
+                        agg_dev, coarse = device_contract(dg)
+                        m_sparsifier = dg.m
+                    elif contraction == "sharded":
+                        agg_dev, coarse = sharded_contract(
+                            dg, mesh, axis=shard_axis)
+                        m_sparsifier = dg.m
+                    else:
+                        sg = subgraph(g, edge_mask) \
+                            if edge_mask is not None else g
+                        agg_host, coarse = contract(sg)
+                        agg_dev = jnp.asarray(agg_host)
+                        m_sparsifier = sg.m
+                lev_span.set(n_coarse=coarse.n)
+            if coarse.n >= g.n:  # no progress — stop rather than loop
+                break
+            idx, val = dg.to_ell()
+            lev_stats = {
+                "n": g.n, "m": g.m, "m_sparsifier": m_sparsifier,
+                "n_coarse": coarse.n, "shrink": coarse.n / g.n,
+                "contraction": contraction,
+            }
+            levels.append(Level(
+                n=g.n, idx=idx, val=val, diag=dg.diag,
+                agg=agg_dev, n_coarse=coarse.n, stats=lev_stats,
+            ))
+            g = coarse
+        coarse_stats = {"n": g.n, "m": g.m, "m_sparsifier": g.m,
+                        "n_coarse": g.n, "shrink": 1.0,
+                        "contraction": contraction}
+        with tracer.span("hierarchy.coarse_chol", n=g.n):
+            chol = _grounded_chol(g)
+        build_span.set(depth=len(levels) + 1)
+    m = get_metrics()
+    m.inc("hierarchy.builds")
+    m.inc("hierarchy.levels_built", len(levels))
+    m.set_gauge("hierarchy.last_depth", len(levels) + 1)
     return Hierarchy(levels=tuple(levels), coarse_n=g.n,
-                     coarse_chol=_grounded_chol(g), coarse_stats=coarse_stats)
+                     coarse_chol=chol, coarse_stats=coarse_stats)

@@ -32,6 +32,7 @@ across flushes instead of per-flush list positions.
 from __future__ import annotations
 
 import collections
+import copy
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -40,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.obs import Metrics, get_metrics, get_tracer
+from repro.obs.device import trace_annotation
 from repro.pipeline import PipelineConfig, pdgrass_config
 from repro.pipeline import validate as validate_config
 from repro.solver import cache as cache_mod
@@ -82,7 +85,8 @@ class SolverService:
                  store: Optional[GraphStore] = None,
                  contraction: Optional[str] = None,
                  max_pending_columns: Optional[int] = None,
-                 mesh=None, shard_axis: str = "data"):
+                 mesh=None, shard_axis: str = "data",
+                 metrics: Optional[Metrics] = None):
         """``pipeline`` selects the default sparsification pipeline backing
         the preconditioner (any family member — pdGRASS, feGRASS, custom
         stage mixes); individual requests may override it with
@@ -141,9 +145,16 @@ class SolverService:
         self.matvec_impl = matvec_impl or default_matvec_impl()
         self.tile_n = tile_n
         self.store = store if store is not None else GraphStore()
+        # Per-service metrics registry (``solver.*`` / ``cache.*``
+        # namespaces): two services never share counters, so fresh-service
+        # stats start from zero.  Module-level instrumentation (pipeline,
+        # hierarchy, distributed) lands in the process-wide registry and is
+        # merged into ``stats()["metrics"]`` read-only.
+        self.metrics = metrics if metrics is not None else Metrics()
         self.cache = LRUCache(capacity=cache_capacity, disk_dir=disk_dir,
                               disk_max_entries=disk_max_entries,
-                              disk_max_bytes=disk_max_bytes)
+                              disk_max_bytes=disk_max_bytes,
+                              metrics=self.metrics)
         # fingerprint -> jit'd solve closure, LRU-bounded (see _solver_for)
         self._solvers: "collections.OrderedDict[str, object]" = \
             collections.OrderedDict()
@@ -162,6 +173,8 @@ class SolverService:
         # cumulative compile-vs-solve wall-time split (ms), see stats()
         self._timing = {"warmup_compile_ms": 0.0, "setup_ms": 0.0,
                         "solve_ms": 0.0}
+        # config digests with convergence histograms (see stats())
+        self._conv_digests: set = set()
 
     # -- graph plane ---------------------------------------------------------
 
@@ -244,12 +257,15 @@ class SolverService:
         if widths is not None and any(int(w) < 1 for w in widths):
             raise ValueError(f"widths must be >= 1, got {list(widths)}")
         buckets = sorted({_next_pow2(int(w)) for w in (widths or ())})
+        tracer = get_tracer()
         for config in (configs if configs is not None else [self.pipeline]):
             validate_config(config)
             key = self._key(handle, config)
-            _, artifacts, source = self.artifacts(handle, key=key,
-                                                  pipeline=config)
-            solve = self._solver_for(key, artifacts)
+            with tracer.span("solver.warmup", config=config.digest(),
+                             buckets=buckets):
+                _, artifacts, source = self.artifacts(handle, key=key,
+                                                      pipeline=config)
+                solve = self._solver_for(key, artifacts)
             sources[config.digest()] = source
             for k_pad in buckets:
                 # Mirror the flush call signature exactly ([n, k_pad] f32
@@ -273,8 +289,11 @@ class SolverService:
                             if size_before is not None
                             else (key, k_pad) not in self._warmed)
                 if compiled:
-                    self._timing["warmup_compile_ms"] += \
-                        (time.perf_counter() - t0) * 1e3
+                    compile_ms = (time.perf_counter() - t0) * 1e3
+                    self._timing["warmup_compile_ms"] += compile_ms
+                    self.metrics.observe("solver.warmup.compile_ms",
+                                         compile_ms)
+                    self.metrics.inc("solver.warmup.compiles")
                 self._warmed.add((key, k_pad))
         return sources
 
@@ -323,6 +342,7 @@ class SolverService:
         if (self.max_pending_columns is not None
                 and self._pending_columns + cols > self.max_pending_columns):
             self._sched["rejected"] += 1
+            self.metrics.inc("solver.rejected")
             raise AdmissionError(self._pending_columns, cols,
                                  self.max_pending_columns)
         handle = self.store.register(request.graph)
@@ -330,6 +350,7 @@ class SolverService:
                              request=request)
         self._next_ticket += 1
         self._sched["submitted"] += 1
+        self.metrics.inc("solver.submitted")
         self._pending.append((ticket, handle, request))
         self._pending_columns += cols
         return ticket
@@ -340,7 +361,9 @@ class SolverService:
         pending, self._pending = self._pending, []
         self._pending_columns = 0
         self._sched["flushes"] += 1
-        return self._solve_batch(pending)
+        self.metrics.inc("solver.flushes")
+        with get_tracer().span("solver.flush", requests=len(pending)):
+            return self._solve_batch(pending)
 
     def solve(self, graph: Union[Graph, GraphHandle], b: np.ndarray,
               tol: float = 1e-5, maxiter: int = 2000,
@@ -364,8 +387,35 @@ class SolverService:
         (keyed by ``PipelineConfig.digest()``).  ``store.hash_events``
         counts the O(m) content hashes this service's store triggered
         (``process_hash_events`` is the process-wide total) — traffic over
-        registered graphs keeps both flat."""
-        return {
+        registered graphs keeps both flat.
+
+        Telemetry keys (see README "Observability"):
+
+        * ``"metrics"`` — the flat namespaced registry: this service's
+          ``solver.*`` / ``cache.*`` instruments merged over the
+          process-wide ``pipeline.*`` / ``hierarchy.*`` / ``dist.*`` /
+          ``store.hash_events`` ones (the namespaces are disjoint, so the
+          merge never shadows).
+        * ``"convergence"`` — per config digest: PCG iteration-count and
+          final-relative-residual histograms plus setup/solve latency
+          percentiles, observed once per flush group.
+
+        The returned dict is a **deep copy**: callers may mutate it freely
+        (diffing, annotating, json round-trips) without corrupting the
+        service's live counters."""
+        convergence = {}
+        for d in sorted(self._conv_digests):
+            convergence[d] = {
+                "iters": self.metrics.histogram(
+                    f"solver.pcg.iters.{d}").snapshot(),
+                "relres": self.metrics.histogram(
+                    f"solver.pcg.relres.{d}").snapshot(),
+                "setup_ms": self.metrics.histogram(
+                    f"solver.latency.setup_ms.{d}").snapshot(),
+                "solve_ms": self.metrics.histogram(
+                    f"solver.latency.solve_ms.{d}").snapshot(),
+            }
+        return copy.deepcopy({
             "cache": self.cache.stats,
             "store": {**self.store.stats,
                       "process_hash_events": cache_mod.HASH_EVENTS},
@@ -380,7 +430,10 @@ class SolverService:
             "mesh": {"descriptor": mesh_descriptor(self.mesh,
                                                    self.shard_axis)},
             "timing": dict(self._timing),
-        }
+            "metrics": {**get_metrics().snapshot(),
+                        **self.metrics.snapshot()},
+            "convergence": convergence,
+        })
 
     # -- scheduler -----------------------------------------------------------
 
@@ -396,6 +449,7 @@ class SolverService:
                 keys[gid] = self._key(handle, config)
             groups.setdefault(gid, []).append(i)
         self._sched["groups"] += len(groups)
+        self.metrics.inc("solver.groups", len(groups))
 
         # Groups fail independently: an exception while building or solving
         # one (graph, config) group fails only that group's tickets (their
@@ -409,10 +463,12 @@ class SolverService:
                 solved = self._solve_group(entries, config, keys[gid])
             except Exception as e:
                 self._sched["group_failures"] += 1
+                self.metrics.inc("solver.group_failures")
                 for ticket, _, _ in entries:
                     ticket._fail(e)
                 continue
             self._sched["requests_solved"] += len(entries)
+            self.metrics.inc("solver.requests_solved", len(entries))
             self._solves_by_config[config.digest()] += len(entries)
             out.update(solved)
         return out
@@ -426,12 +482,25 @@ class SolverService:
         handle = entries[0][1]
         g = handle.graph
         config_digest = config.digest()
+        tracer = get_tracer()
+        with tracer.span("solver.group", config=config_digest,
+                         n=g.n, requests=len(entries)) as group_span:
+            return self._solve_group_inner(
+                entries, config, key, g, config_digest, tracer, group_span)
 
-        t0 = time.perf_counter()
-        _, artifacts, source = self.artifacts(handle, key=key,
-                                              pipeline=config)
-        setup_ms = (time.perf_counter() - t0) * 1e3
-        solve = self._solver_for(key, artifacts)
+    def _solve_group_inner(self, entries, config, key, g, config_digest,
+                           tracer, group_span):
+        """Body of :meth:`_solve_group`, factored out so the whole group —
+        artifact fetch, batched solve, refinement — nests under one
+        ``solver.group`` span."""
+        handle = entries[0][1]
+        with tracer.span("solver.artifacts", config=config_digest) as asp:
+            t0 = time.perf_counter()
+            _, artifacts, source = self.artifacts(handle, key=key,
+                                                  pipeline=config)
+            setup_ms = (time.perf_counter() - t0) * 1e3
+            solve = self._solver_for(key, artifacts)
+            asp.set(source=source)
 
         cols, owner = [], []       # owner[j] = (entry-idx, col-in-request)
         for e, (_, _, req) in enumerate(entries):
@@ -472,10 +541,12 @@ class SolverService:
             np.maximum(tol_col, 1e-5).astype(np.float32))
 
         t0 = time.perf_counter()
-        res = solve(jnp.asarray(B), tol=inner_tol,
-                    maxiter=jnp.asarray(maxiter_col))
-        x = np.asarray(res.x, dtype=np.float64)
-        iters = np.asarray(res.iters).copy()
+        with tracer.span("solver.solve", k=k, k_pad=k_pad, n=g.n), \
+                trace_annotation("solver.solve"):
+            res = solve(jnp.asarray(B), tol=inner_tol,
+                        maxiter=jnp.asarray(maxiter_col))
+            x = np.asarray(res.x, dtype=np.float64)
+            iters = np.asarray(res.iters).copy()
 
         # Mixed-precision iterative refinement: the f32 device solve hits
         # its attainable-accuracy floor on large/ill-conditioned graphs,
@@ -492,10 +563,13 @@ class SolverService:
         while refinements < self.max_refine and np.any(relres > tol_col):
             rc = resid - resid.mean(axis=0)
             # corrections draw from each column's remaining budget
-            corr = solve(jnp.asarray(rc.astype(np.float32)),
-                         tol=inner_tol,
-                         maxiter=jnp.asarray(np.maximum(
-                             maxiter_col - iters, 0)))
+            with tracer.span("solver.refine", pass_=refinements + 1,
+                             k=k, k_pad=k_pad), \
+                    trace_annotation("solver.refine"):
+                corr = solve(jnp.asarray(rc.astype(np.float32)),
+                             tol=inner_tol,
+                             maxiter=jnp.asarray(np.maximum(
+                                 maxiter_col - iters, 0)))
             x_new = x + np.asarray(corr.x, dtype=np.float64)
             resid_new = B64 - g.laplacian_matvec(x_new)
             relres_new = np.linalg.norm(resid_new, axis=0) / bn
@@ -513,6 +587,26 @@ class SolverService:
         self._timing["setup_ms"] += setup_ms
         self._timing["solve_ms"] += solve_ms
         conv = relres <= tol_col
+        # Convergence telemetry, fetched ONCE per flush group from arrays
+        # this path already materializes (iters/relres came back with the
+        # solution — no extra device round-trip).  Padding columns are
+        # excluded: only the k real right-hand sides count.
+        m = self.metrics
+        self._conv_digests.add(config_digest)
+        m.observe_many(f"solver.pcg.iters.{config_digest}",
+                       np.asarray(iters[:k], dtype=np.float64))
+        m.observe_many(f"solver.pcg.relres.{config_digest}",
+                       np.asarray(relres[:k], dtype=np.float64))
+        m.observe(f"solver.latency.setup_ms.{config_digest}", setup_ms)
+        m.observe(f"solver.latency.solve_ms.{config_digest}", solve_ms)
+        m.inc("solver.refinement_passes", refinements)
+        if not bool(conv[:k].all()):
+            m.inc("solver.unconverged_columns",
+                  int(k - int(conv[:k].sum())))
+        group_span.set(k=k, k_pad=k_pad, source=source,
+                       refinements=refinements,
+                       max_iters=int(np.max(iters[:k])) if k else 0,
+                       converged=bool(conv[:k].all()))
         out: Dict[SolveTicket, SolveResponse] = {}
         for e, (ticket, _, req) in enumerate(entries):
             mine = [j for j, (ee, _) in enumerate(owner) if ee == e]

@@ -47,6 +47,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.graph_ops import shard_map_compat
+from repro.obs import get_tracer
+from repro.obs.device import named_scope
 from repro.solver.device_pcg import (BatchedPCGResult, _pcg_loop,
                                      estimate_dinv_rho,
                                      make_chebyshev_smoother, make_matvec)
@@ -189,13 +191,17 @@ def make_sharded_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
     n_sh = int(mesh.shape[axis])
     n = int(np.asarray(idx).shape[0])
 
-    top_slab, top_meta = shard_ell_slabs(idx, val, n_sh)
+    tracer = get_tracer()
+    with tracer.span("sharded.shard_slabs", n=n, n_sh=n_sh):
+        top_slab, top_meta = shard_ell_slabs(idx, val, n_sh)
     levels: tuple = ()
     level_meta: tuple = ()
     coarse_chol = None
     coarse_n = n
     if precond == "hierarchy":
-        prepped = [_prep_level(lev, n_sh) for lev in hierarchy.levels]
+        with tracer.span("sharded.prep_levels",
+                         levels=len(hierarchy.levels), n_sh=n_sh):
+            prepped = [_prep_level(lev, n_sh) for lev in hierarchy.levels]
         levels = tuple(p[0] for p in prepped)
         level_meta = tuple(p[1] for p in prepped)
         coarse_chol = hierarchy.coarse_chol
@@ -245,21 +251,24 @@ def make_sharded_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
 
         def cycle(l, r_loc):
             if l == n_levels:
-                return coarse_solve(r_loc)
+                with named_scope("sharded_vcycle.coarse"):
+                    return coarse_solve(r_loc)
             ll, lm = levels_loc[l], level_meta[l]
             mv, smooth = lev_mvs[l], smoothers[l]
-            z = smooth(r_loc)                                 # pre-smooth
-            resid = r_loc - mv(z)
-            rc = jax.lax.psum(                                # restrict
-                jnp.zeros((lm.nc_pad, k), r_loc.dtype)
-                .at[ll.agg].add(resid, mode="drop"), axis)
-            my = jax.lax.axis_index(axis)
-            rc_loc = jax.lax.dynamic_slice_in_dim(
-                rc, my * lm.nc_loc, lm.nc_loc)
+            with named_scope(f"sharded_vcycle.L{l}.down"):
+                z = smooth(r_loc)                             # pre-smooth
+                resid = r_loc - mv(z)
+                rc = jax.lax.psum(                            # restrict
+                    jnp.zeros((lm.nc_pad, k), r_loc.dtype)
+                    .at[ll.agg].add(resid, mode="drop"), axis)
+                my = jax.lax.axis_index(axis)
+                rc_loc = jax.lax.dynamic_slice_in_dim(
+                    rc, my * lm.nc_loc, lm.nc_loc)
             zc = cycle(l + 1, rc_loc)                         # coarse correct
-            zc_full = jax.lax.all_gather(zc, axis, tiled=True)
-            z = z + zc_full[jnp.minimum(ll.agg, lm.nc_pad - 1)]  # prolong
-            return smooth(r_loc, z)                           # post-smooth
+            with named_scope(f"sharded_vcycle.L{l}.up"):
+                zc_full = jax.lax.all_gather(zc, axis, tiled=True)
+                z = z + zc_full[jnp.minimum(ll.agg, lm.nc_pad - 1)]  # prolong
+                return smooth(r_loc, z)                       # post-smooth
 
         if precond == "hierarchy":
             def msolve(r_loc):
