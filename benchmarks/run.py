@@ -45,8 +45,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (fig1_summary, kernels_bench, pdgrass_perf,
-                            solver_bench, table2_quality, table3_jbp,
-                            table4_scaling)
+                            replay_bench, solver_bench, table2_quality,
+                            table3_jbp, table4_scaling)
     from benchmarks.common import write_bench_json
 
     if args.trace:
@@ -61,6 +61,7 @@ def main(argv=None) -> None:
         ("pdgrass_perf", pdgrass_perf.main),
         ("kernels_bench", kernels_bench.main),
         ("solver_bench", solver_bench.main),
+        ("replay_bench", replay_bench.main),
     ]
     section_argv = ["--quick"] if args.smoke else []
     solver_json = None

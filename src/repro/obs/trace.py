@@ -74,6 +74,36 @@ class _NoopSpan:
 NOOP_SPAN = _NoopSpan()
 
 
+class _DroppedSpan:
+    """Context manager for an *unsampled* trace on an enabled tracer.
+
+    Sampling decisions are made at the root span only; everything nested
+    under a dropped root must also be dropped, and the no-op singleton
+    cannot express that (it does not track enter/exit).  This object
+    maintains a per-thread "drop depth" so nested ``span()`` calls know
+    they are inside a dropped trace.  It is only ever constructed when
+    ``sample_rate < 1.0`` — the always-on and disabled paths never pay
+    the allocation.
+    """
+
+    __slots__ = ("_tracer",)
+
+    def __init__(self, tracer: "Tracer"):
+        self._tracer = tracer
+
+    def __enter__(self) -> "_DroppedSpan":
+        tls = self._tracer._tls
+        tls.drop_depth = getattr(tls, "drop_depth", 0) + 1
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._tracer._tls.drop_depth -= 1
+        return False
+
+    def set(self, **attrs) -> "_DroppedSpan":
+        return self
+
+
 class _Span:
     """A live (entered, not yet exited) span.  Only ever constructed by an
     *enabled* tracer — the allocation spy in the tests counts instances of
@@ -118,9 +148,25 @@ class Tracer:
     shared :data:`NOOP_SPAN` and records nothing.
     """
 
-    def __init__(self, enabled: bool = False, max_events: int = 200_000):
+    def __init__(self, enabled: bool = False, max_events: int = 200_000,
+                 sample_rate: float = 1.0):
+        """``sample_rate`` keeps 1-in-round(1/rate) *root* spans (depth 0 on
+        their thread) and everything nested under them; the other traces are
+        dropped wholesale.  The decision is a deterministic counter, not a
+        RNG — rate 0.25 records roots 0, 4, 8, ... — so production sampling
+        (e.g. 1-in-N daemon flush cycles) is reproducible.  ``1.0`` (the
+        default) records everything and skips the sampling machinery
+        entirely; the disabled path is unaffected either way."""
         self.enabled = bool(enabled)
         self.max_events = int(max_events)
+        sample_rate = float(sample_rate)
+        if not 0.0 < sample_rate <= 1.0:
+            raise ValueError(
+                f"sample_rate wants a fraction in (0, 1], got {sample_rate}")
+        self.sample_rate = sample_rate
+        self._sample_period = max(1, round(1.0 / sample_rate))
+        self._sample_seq = 0
+        self.sampled_out = 0   # root spans dropped by the sampler
         self.dropped = 0
         self._pid = os.getpid()
         self._lock = threading.Lock()
@@ -137,6 +183,19 @@ class Tracer:
         self.enabled = False
         return self
 
+    def set_sample_rate(self, sample_rate: float) -> "Tracer":
+        """Reconfigure sampling on a live tracer (see ``__init__``); the
+        root-span counter restarts so the next root is always recorded."""
+        sample_rate = float(sample_rate)
+        if not 0.0 < sample_rate <= 1.0:
+            raise ValueError(
+                f"sample_rate wants a fraction in (0, 1], got {sample_rate}")
+        with self._lock:
+            self.sample_rate = sample_rate
+            self._sample_period = max(1, round(1.0 / sample_rate))
+            self._sample_seq = 0
+        return self
+
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
@@ -149,13 +208,27 @@ class Tracer:
         event's ``args``.  The no-op singleton when disabled."""
         if not self.enabled:
             return NOOP_SPAN
+        if self._sample_period > 1:
+            tls = self._tls
+            if getattr(tls, "drop_depth", 0) > 0:
+                return _DroppedSpan(self)     # inside a dropped trace
+            if getattr(tls, "depth", 0) == 0:
+                with self._lock:
+                    seq = self._sample_seq
+                    self._sample_seq += 1
+                if seq % self._sample_period != 0:
+                    self.sampled_out += 1
+                    return _DroppedSpan(self)
         return _Span(self, name, attrs or None)
 
     def instant(self, name: str, **attrs) -> None:
-        """A zero-duration marker event (Chrome "i" phase)."""
+        """A zero-duration marker event (Chrome "i" phase).  Instants inside
+        a sampled-out trace are dropped with it."""
         if not self.enabled:
             return
         tls = self._tls
+        if getattr(tls, "drop_depth", 0) > 0:
+            return
         self._record(name, time.perf_counter_ns(), None,
                      getattr(tls, "depth", 0), attrs or None)
 
@@ -261,7 +334,11 @@ def get_tracer() -> Tracer:
     return _GLOBAL
 
 
-def enable_tracing() -> Tracer:
+def enable_tracing(sample_rate: Optional[float] = None) -> Tracer:
+    """Enable the process-wide tracer; ``sample_rate`` (optional) installs
+    1-in-N root-span sampling for always-on production tracing."""
+    if sample_rate is not None:
+        _GLOBAL.set_sample_rate(sample_rate)
     return _GLOBAL.enable()
 
 

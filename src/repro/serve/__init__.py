@@ -1,0 +1,26 @@
+"""repro.serve: serving runtimes.
+
+  * :mod:`repro.serve.engine`        — LM continuous-batching engine
+    (prefill + jit'd decode over KV-cache slots).
+  * :mod:`repro.serve.solver_daemon` — async Laplacian-solve runtime: a
+    background flusher over :class:`~repro.solver.service.SolverService`
+    with deadline/size batching, multi-tenant fairness, and event-resolved
+    tickets (no caller-side ``flush()``).
+  * :mod:`repro.serve.replay`        — deterministic open-loop traffic
+    replay (seeded arrival schedules, p50/p99 latency reports) for
+    benchmarking the daemon against the sync-flush baseline.
+
+The LM engine is imported lazily by its users; importing this package pulls
+only the solver-serving surface.
+"""
+from repro.serve.replay import (ReplayEvent, ReplayReport,  # noqa: F401
+                                make_rhs, make_schedule, replay_daemon,
+                                replay_sync)
+from repro.serve.solver_daemon import (DaemonShutdownError,  # noqa: F401
+                                       SolverDaemon, TenantConfig)
+
+__all__ = [
+    "SolverDaemon", "TenantConfig", "DaemonShutdownError",
+    "ReplayEvent", "ReplayReport", "make_schedule", "make_rhs",
+    "replay_daemon", "replay_sync",
+]

@@ -23,11 +23,15 @@ Three ideas, one module:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Union
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, build_graph
 from repro.pipeline import PipelineConfig
 from repro.solver import cache as _cache
 from repro.solver.cache import content_fingerprint
@@ -71,31 +75,108 @@ class GraphStore:
     ``register`` is idempotent: re-registering the same graph object is a
     memo lookup, and registering a structurally identical copy returns the
     *existing* handle (one graph in the store, one set of cache entries).
+
+    With ``persist_dir`` set the store survives restarts: every newly
+    registered graph is written as ``<fingerprint>.npz`` (the canonical
+    edge arrays, atomic tmp-file + ``os.replace`` write), and construction
+    rehydrates every persisted graph back into handles.  Rehydration
+    trusts the persisted digest (the filename, cross-checked against the
+    digest stored *inside* the file) instead of re-hashing the edge
+    arrays, so a restarted service hits its disk artifact cache with zero
+    new ``hash_events`` — the whole point of persisting the store beside
+    the artifact tier.  Torn or corrupt files (near-impossible given the
+    atomic writes) are skipped, not fatal.
+
+    Thread-safe: ``register``/``get`` may be called concurrently from
+    producer threads feeding a background flusher.
     """
 
-    def __init__(self):
+    def __init__(self, persist_dir: Optional[str] = None):
         self._handles: Dict[str, GraphHandle] = {}
+        self._lock = threading.Lock()
         self.hash_events = 0   # O(m) content hashes this store triggered
+        self.persist_dir = persist_dir
+        self.persisted = 0     # graphs written to persist_dir by this store
+        self.rehydrated = 0    # handles loaded from persist_dir at init
+        if persist_dir:
+            os.makedirs(persist_dir, exist_ok=True)
+            self._rehydrate()
+
+    def _path(self, fingerprint: str) -> str:
+        return os.path.join(self.persist_dir, f"{fingerprint}.npz")
+
+    def _rehydrate(self) -> None:
+        for name in sorted(os.listdir(self.persist_dir)):
+            if not name.endswith(".npz"):
+                continue
+            fp = name[:-4]
+            try:
+                with np.load(self._path(fp)) as z:
+                    stored_fp = str(z["fingerprint"])
+                    if stored_fp != fp:
+                        continue   # filename/content mismatch: ignore
+                    g = build_graph(int(z["n"]), z["src"], z["dst"],
+                                    z["weight"])
+            except Exception:
+                continue   # torn/corrupt/foreign file: skip, never crash
+            # Adopt the persisted digest as the memo — no O(m) re-hash —
+            # and freeze the arrays exactly like content_fingerprint does.
+            object.__setattr__(g, "_content_fp", fp)
+            for arr in (g.src, g.dst, g.weight):
+                arr.flags.writeable = False
+            self._handles[fp] = GraphHandle(graph=g, fingerprint=fp)
+            self.rehydrated += 1
+
+    def _persist(self, handle: GraphHandle) -> None:
+        path = self._path(handle.fingerprint)
+        if os.path.exists(path):
+            return
+        g = handle.graph
+        fd, tmp = tempfile.mkstemp(dir=self.persist_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, fingerprint=handle.fingerprint, n=g.n,
+                         src=g.src, dst=g.dst, weight=g.weight)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        self.persisted += 1
 
     def register(self, graph: Union[Graph, GraphHandle]) -> GraphHandle:
         if isinstance(graph, GraphHandle):
-            self._handles.setdefault(graph.fingerprint, graph)
-            return self._handles[graph.fingerprint]
+            with self._lock:
+                handle = self._handles.setdefault(graph.fingerprint, graph)
+                if self.persist_dir:
+                    self._persist(handle)
+                return handle
         if not isinstance(graph, Graph):
             raise TypeError(
                 f"register wants a Graph or GraphHandle, got "
                 f"{type(graph).__name__}")
         before = _cache.HASH_EVENTS
         fp = content_fingerprint(graph)
-        self.hash_events += _cache.HASH_EVENTS - before
-        handle = self._handles.get(fp)
-        if handle is None:
-            handle = GraphHandle(graph=graph, fingerprint=fp)
-            self._handles[fp] = handle
-        return handle
+        with self._lock:
+            self.hash_events += _cache.HASH_EVENTS - before
+            handle = self._handles.get(fp)
+            if handle is None:
+                handle = GraphHandle(graph=graph, fingerprint=fp)
+                self._handles[fp] = handle
+            if self.persist_dir:
+                self._persist(handle)
+            return handle
 
     def get(self, fingerprint: str) -> Optional[GraphHandle]:
-        return self._handles.get(fingerprint)
+        with self._lock:
+            return self._handles.get(fingerprint)
+
+    def handles(self) -> List[GraphHandle]:
+        """Snapshot of every registered handle (rehydrated ones included)."""
+        with self._lock:
+            return list(self._handles.values())
 
     def __len__(self) -> int:
         return len(self._handles)
@@ -113,8 +194,13 @@ class GraphStore:
 
     @property
     def stats(self) -> dict:
-        return {"graphs": len(self._handles),
-                "hash_events": self.hash_events}
+        out = {"graphs": len(self._handles),
+               "hash_events": self.hash_events}
+        if self.persist_dir:
+            out.update({"persist_dir": self.persist_dir,
+                        "persisted": self.persisted,
+                        "rehydrated": self.rehydrated})
+        return out
 
 
 class AdmissionError(RuntimeError):
@@ -125,14 +211,18 @@ class AdmissionError(RuntimeError):
     ``requested`` columns in the rejected submit, and the ``budget``.
     """
 
-    def __init__(self, pending: int, requested: int, budget: int):
+    def __init__(self, pending: int, requested: int, budget: int,
+                 tenant: Optional[str] = None):
         self.pending = pending
         self.requested = requested
         self.budget = budget
+        self.tenant = tenant
+        who = f"tenant {tenant!r}" if tenant is not None else "scheduler"
         super().__init__(
-            f"admission rejected: {pending} column(s) pending + "
-            f"{requested} requested > max_pending_columns={budget} — "
-            f"flush() the service (or raise the budget) and resubmit")
+            f"admission rejected for {who}: {pending} column(s) pending + "
+            f"{requested} requested > budget={budget} — "
+            f"wait for the pending work to drain (or raise the budget) "
+            f"and resubmit")
 
 
 @dataclasses.dataclass
@@ -173,6 +263,12 @@ class SolveTicket(int):
     flushing the owning service first if the ticket is still pending.
     Tickets are resolvable in any order — each holds its own outcome.
 
+    Tickets issued through a :class:`~repro.serve.solver_daemon.SolverDaemon`
+    carry a per-ticket ``threading.Event`` instead of a service back-ref:
+    ``result(timeout=...)`` then *blocks* until the background flusher
+    resolves the ticket (raising ``TimeoutError`` on expiry) — no caller
+    ever triggers a flush.  ``done()`` stays non-blocking in both modes.
+
     Subclasses ``int`` (the service-wide monotonic ticket id), so v1 code
     doing ``svc.flush()[ticket]`` keeps working: flush dicts are keyed by
     these same objects and ints hash by value.
@@ -185,6 +281,8 @@ class SolveTicket(int):
         self._request = request
         self._response: Optional[SolveResponse] = None
         self._error: Optional[BaseException] = None
+        self._event: Optional[threading.Event] = None
+        self._resolved_at: Optional[float] = None  # time.perf_counter()
         return self
 
     @property
@@ -198,9 +296,30 @@ class SolveTicket(int):
         """The exception that failed this ticket's group, if any."""
         return self._error
 
-    def result(self) -> SolveResponse:
-        if not self.done() and self._service is not None:
-            self._service.flush()
+    def result(self, timeout: Optional[float] = None) -> SolveResponse:
+        if not self.done():
+            if self._event is not None:
+                # Async (daemon) mode: block on the per-ticket event the
+                # background flusher sets at resolution — never flush from
+                # the caller's thread.
+                if not self._event.wait(timeout):
+                    raise TimeoutError(
+                        f"ticket {int(self)} unresolved after {timeout}s — "
+                        f"the daemon may be saturated or shut down")
+            elif self._service is not None:
+                if self._service._has_pending(self):
+                    self._service.flush()
+                else:
+                    # The flush that should have settled this ticket already
+                    # ran without it (stale ticket from a restarted service,
+                    # or a ticket submitted to a *different* service).
+                    # Flushing here would pointlessly solve unrelated
+                    # pending work and still leave this ticket unresolved.
+                    raise RuntimeError(
+                        f"ticket {int(self)} is not pending on its service "
+                        f"and was never resolved — it is stale (its flush "
+                        f"already ran without it) or belongs to another "
+                        f"service; re-submit the request")
         if self._error is not None:
             raise self._error
         if self._response is None:
@@ -211,9 +330,15 @@ class SolveTicket(int):
 
     def _resolve(self, response: SolveResponse) -> None:
         self._response = response
+        self._resolved_at = time.perf_counter()
+        if self._event is not None:
+            self._event.set()
 
     def _fail(self, error: BaseException) -> None:
         self._error = error
+        self._resolved_at = time.perf_counter()
+        if self._event is not None:
+            self._event.set()
 
     def __repr__(self) -> str:
         return f"SolveTicket({int(self)}, done={self.done()})"

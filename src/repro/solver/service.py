@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import collections
 import copy
+import os
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -144,7 +146,14 @@ class SolverService:
         self.max_pending_columns = max_pending_columns
         self.matvec_impl = matvec_impl or default_matvec_impl()
         self.tile_n = tile_n
-        self.store = store if store is not None else GraphStore()
+        # With a disk tier configured, the default store persists beside it
+        # (``<disk_dir>/graphstore/<fingerprint>.npz``): a restarted service
+        # rehydrates its handles AND hits the persisted artifacts — no
+        # caller re-registers edge arrays, no O(m) re-fingerprints.
+        if store is None:
+            store = GraphStore(persist_dir=os.path.join(
+                disk_dir, "graphstore")) if disk_dir else GraphStore()
+        self.store = store
         # Per-service metrics registry (``solver.*`` / ``cache.*``
         # namespaces): two services never share counters, so fresh-service
         # stats start from zero.  Module-level instrumentation (pipeline,
@@ -158,10 +167,13 @@ class SolverService:
         # fingerprint -> jit'd solve closure, LRU-bounded (see _solver_for)
         self._solvers: "collections.OrderedDict[str, object]" = \
             collections.OrderedDict()
-        # [(ticket, handle, request)] — the scheduler's input queue
+        # [(ticket, handle, request)] — the scheduler's input queue.
+        # Guarded by _lock: submits may race the daemon's background
+        # flusher (and each other) once a SolverDaemon wraps this service.
         self._pending: List[Tuple[SolveTicket, GraphHandle, SolveRequest]] = []
         self._pending_columns = 0
         self._next_ticket = 0
+        self._lock = threading.RLock()
         # "submitted" counts admitted requests (rejected ones never enter
         # the queue), so submitted/rejected is the admission split.
         self._sched = {"submitted": 0, "flushes": 0, "groups": 0,
@@ -339,28 +351,54 @@ class SolverService:
         self._validate(request)
         shape = np.shape(request.b)   # no copy — b may be device-resident
         cols = 1 if len(shape) == 1 else int(shape[1])
-        if (self.max_pending_columns is not None
-                and self._pending_columns + cols > self.max_pending_columns):
-            self._sched["rejected"] += 1
-            self.metrics.inc("solver.rejected")
-            raise AdmissionError(self._pending_columns, cols,
-                                 self.max_pending_columns)
         handle = self.store.register(request.graph)
-        ticket = SolveTicket(self._next_ticket, service=self,
-                             request=request)
-        self._next_ticket += 1
-        self._sched["submitted"] += 1
+        with self._lock:
+            if (self.max_pending_columns is not None
+                    and self._pending_columns + cols
+                    > self.max_pending_columns):
+                self._sched["rejected"] += 1
+                self.metrics.inc("solver.rejected")
+                raise AdmissionError(self._pending_columns, cols,
+                                     self.max_pending_columns)
+            ticket = SolveTicket(self._next_ticket, service=self,
+                                 request=request)
+            self._next_ticket += 1
+            self._sched["submitted"] += 1
+            self._pending.append((ticket, handle, request))
+            self._pending_columns += cols
         self.metrics.inc("solver.submitted")
-        self._pending.append((ticket, handle, request))
-        self._pending_columns += cols
         return ticket
+
+    def _new_ticket(self, request: SolveRequest,
+                    handle: Optional[GraphHandle] = None,
+    ) -> Tuple[SolveTicket, GraphHandle]:
+        """Validate + register + allocate a service-wide ticket id WITHOUT
+        queueing: the entry point for external schedulers (the async daemon
+        keeps its own fairness-ordered queue and hands batches straight to
+        :meth:`_solve_batch`).  The ticket carries no service back-ref, so
+        ``result()`` never triggers a caller-thread flush."""
+        self._validate(request)
+        if handle is None:
+            handle = self.store.register(request.graph)
+        with self._lock:
+            ticket = SolveTicket(self._next_ticket, service=None,
+                                 request=request)
+            self._next_ticket += 1
+        return ticket, handle
+
+    def _has_pending(self, ticket: SolveTicket) -> bool:
+        """Identity membership in the pending queue (``result()`` uses this
+        to distinguish a flushable ticket from a stale/foreign one)."""
+        with self._lock:
+            return any(t is ticket for t, _, _ in self._pending)
 
     def flush(self) -> Dict[SolveTicket, SolveResponse]:
         """Solve everything pending — one batched PCG per distinct
         (graph, pipeline-config) group."""
-        pending, self._pending = self._pending, []
-        self._pending_columns = 0
-        self._sched["flushes"] += 1
+        with self._lock:
+            pending, self._pending = self._pending, []
+            self._pending_columns = 0
+            self._sched["flushes"] += 1
         self.metrics.inc("solver.flushes")
         with get_tracer().span("solver.flush", requests=len(pending)):
             return self._solve_batch(pending)
@@ -372,10 +410,7 @@ class SolverService:
         queue — other submitted tickets stay queued for the next flush()."""
         req = SolveRequest(graph=graph, b=b, tol=tol, maxiter=maxiter,
                            pipeline=pipeline)
-        self._validate(req)
-        handle = self.store.register(graph)
-        ticket = SolveTicket(self._next_ticket, service=None, request=req)
-        self._next_ticket += 1
+        ticket, handle = self._new_ticket(req)
         out = self._solve_batch([(ticket, handle, req)])
         if ticket not in out:      # single group: surface its failure
             raise ticket.error()
@@ -415,25 +450,26 @@ class SolverService:
                 "solve_ms": self.metrics.histogram(
                     f"solver.latency.solve_ms.{d}").snapshot(),
             }
-        return copy.deepcopy({
-            "cache": self.cache.stats,
-            "store": {**self.store.stats,
-                      "process_hash_events": cache_mod.HASH_EVENTS},
-            "scheduler": {**self._sched, "pending": len(self._pending),
-                          "pending_columns": self._pending_columns,
-                          "max_pending_columns": self.max_pending_columns},
-            "solves_by_config": dict(self._solves_by_config),
-            "solvers": {"jit_closures": len(self._solvers),
-                        "capacity": self.cache.capacity},
-            "hierarchy": {"contraction": self.contraction,
-                          "precond": self.precond},
-            "mesh": {"descriptor": mesh_descriptor(self.mesh,
-                                                   self.shard_axis)},
-            "timing": dict(self._timing),
-            "metrics": {**get_metrics().snapshot(),
-                        **self.metrics.snapshot()},
-            "convergence": convergence,
-        })
+        with self._lock:
+            return copy.deepcopy({
+                "cache": self.cache.stats,
+                "store": {**self.store.stats,
+                          "process_hash_events": cache_mod.HASH_EVENTS},
+                "scheduler": {**self._sched, "pending": len(self._pending),
+                              "pending_columns": self._pending_columns,
+                              "max_pending_columns": self.max_pending_columns},
+                "solves_by_config": dict(self._solves_by_config),
+                "solvers": {"jit_closures": len(self._solvers),
+                            "capacity": self.cache.capacity},
+                "hierarchy": {"contraction": self.contraction,
+                              "precond": self.precond},
+                "mesh": {"descriptor": mesh_descriptor(self.mesh,
+                                                       self.shard_axis)},
+                "timing": dict(self._timing),
+                "metrics": {**get_metrics().snapshot(),
+                            **self.metrics.snapshot()},
+                "convergence": convergence,
+            })
 
     # -- scheduler -----------------------------------------------------------
 
@@ -448,7 +484,8 @@ class SolverService:
             if gid not in keys:
                 keys[gid] = self._key(handle, config)
             groups.setdefault(gid, []).append(i)
-        self._sched["groups"] += len(groups)
+        with self._lock:
+            self._sched["groups"] += len(groups)
         self.metrics.inc("solver.groups", len(groups))
 
         # Groups fail independently: an exception while building or solving
@@ -462,14 +499,16 @@ class SolverService:
             try:
                 solved = self._solve_group(entries, config, keys[gid])
             except Exception as e:
-                self._sched["group_failures"] += 1
+                with self._lock:
+                    self._sched["group_failures"] += 1
                 self.metrics.inc("solver.group_failures")
                 for ticket, _, _ in entries:
                     ticket._fail(e)
                 continue
-            self._sched["requests_solved"] += len(entries)
+            with self._lock:
+                self._sched["requests_solved"] += len(entries)
+                self._solves_by_config[config.digest()] += len(entries)
             self.metrics.inc("solver.requests_solved", len(entries))
-            self._solves_by_config[config.digest()] += len(entries)
             out.update(solved)
         return out
 
@@ -584,8 +623,9 @@ class SolverService:
             if not halved:
                 break  # ... but stop once passes stall at the f32 floor
         solve_ms = (time.perf_counter() - t0) * 1e3
-        self._timing["setup_ms"] += setup_ms
-        self._timing["solve_ms"] += solve_ms
+        with self._lock:
+            self._timing["setup_ms"] += setup_ms
+            self._timing["solve_ms"] += solve_ms
         conv = relres <= tol_col
         # Convergence telemetry, fetched ONCE per flush group from arrays
         # this path already materializes (iters/relres came back with the

@@ -337,3 +337,103 @@ def test_warm_solve_records_no_spans_when_disabled(traffic):
 def test_counter_and_gauge_types_exported():
     assert isinstance(Metrics().counter("x"), Counter)
     assert isinstance(Metrics().gauge("y"), Gauge)
+
+
+# -- sampled always-on tracing ----------------------------------------------
+
+
+def test_sampled_tracer_records_every_nth_root_span():
+    tr = Tracer(enabled=True, sample_rate=0.5)     # period 2
+    for i in range(10):
+        with tr.span(f"root{i}"):
+            pass
+    assert tr.span_names() == [f"root{i}" for i in range(0, 10, 2)]
+    assert tr.sampled_out == 5
+
+
+def test_sampling_decision_covers_the_whole_root_tree():
+    """A dropped root suppresses everything beneath it — nested spans and
+    instants never sample independently, so recorded trees stay complete."""
+    tr = Tracer(enabled=True, sample_rate=0.5)
+    for i in range(4):
+        with tr.span(f"root{i}") as root:
+            root.set(i=i)
+            with tr.span("child") as c:
+                c.set(deep=True)
+                with tr.span("grandchild"):
+                    pass
+            tr.instant(f"marker{i}")
+    names = tr.span_names()
+    # roots 0 and 2 recorded with their full subtrees; 1 and 3 vanish whole
+    assert names.count("child") == 2 == names.count("grandchild")
+    assert [n for n in names if n.startswith("root")] == ["root0", "root2"]
+    assert [n for n in names if n.startswith("marker")] == \
+        ["marker0", "marker2"]
+    # nesting depth survived sampling
+    evs = {ev["name"]: ev for ev in tr.events()}
+    assert evs["child"]["depth"] == 1 and evs["grandchild"]["depth"] == 2
+
+
+def test_sample_rate_one_is_the_default_full_firehose():
+    tr = Tracer(enabled=True)
+    for i in range(5):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr.span_names()) == 5 and tr.sampled_out == 0
+
+
+def test_invalid_sample_rate_rejected():
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="sample_rate"):
+            Tracer(sample_rate=bad)
+        with pytest.raises(ValueError, match="sample_rate"):
+            Tracer().set_sample_rate(bad)
+
+
+def test_set_sample_rate_restarts_counter():
+    tr = Tracer(enabled=True, sample_rate=0.25)
+    with tr.span("a"):                  # seq 0: recorded
+        pass
+    tr.set_sample_rate(0.5)             # counter restarts
+    with tr.span("b"):                  # seq 0 again: recorded
+        pass
+    with tr.span("c"):                  # seq 1: dropped
+        pass
+    assert tr.span_names() == ["a", "b"]
+
+
+def test_disabled_sampled_tracer_is_still_allocation_free(monkeypatch):
+    """sample_rate must not cost anything while tracing is off — the
+    always-on production config is (enabled later, sampled forever)."""
+    calls = {"n": 0}
+    real_span = trace_mod._Span
+
+    class Spy(real_span):
+        def __init__(self, *a, **kw):
+            calls["n"] += 1
+            real_span.__init__(self, *a, **kw)
+
+    monkeypatch.setattr(trace_mod, "_Span", Spy)
+    tr = Tracer(enabled=False, sample_rate=0.01)
+    spans = [tr.span(f"s{i}") for i in range(20)]
+    assert calls["n"] == 0
+    assert all(s is NOOP_SPAN for s in spans)
+    assert tr.events() == [] and tr.sampled_out == 0
+
+
+def test_enable_tracing_reconfigures_sample_rate():
+    tr = get_tracer()
+    was_enabled, was_rate = tr.enabled, tr.sample_rate
+    try:
+        from repro.obs import enable_tracing
+        enable_tracing(sample_rate=0.5)
+        assert tr.enabled and tr.sample_rate == 0.5
+        for i in range(4):
+            with tr.span(f"g{i}"):
+                pass
+        assert tr.sampled_out >= 2
+    finally:
+        tr.set_sample_rate(was_rate)
+        tr.enabled = was_enabled
+        tr.clear()
+        tr.sampled_out = 0

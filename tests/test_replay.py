@@ -1,0 +1,80 @@
+"""Deterministic open-loop replay: schedules, RHS generation, both drivers."""
+import numpy as np
+import pytest
+
+from repro.core import grid2d
+from repro.serve import (SolverDaemon, make_rhs, make_schedule, replay_daemon,
+                         replay_sync)
+from repro.solver import SolverService
+
+
+def test_schedule_is_deterministic():
+    a = make_schedule(32, 100.0, seed=7, tenants=(("p", 3.0), ("f", 1.0)))
+    b = make_schedule(32, 100.0, seed=7, tenants=(("p", 3.0), ("f", 1.0)))
+    assert a == b                                   # byte-for-byte identical
+    c = make_schedule(32, 100.0, seed=8, tenants=(("p", 3.0), ("f", 1.0)))
+    assert a != c
+    assert a[0].t == 0.0                            # first arrival at t=0
+    assert all(e2.t >= e1.t for e1, e2 in zip(a, a[1:]))
+    assert {e.tenant for e in a} <= {"p", "f"}
+    # weighted draw: the 3x tenant dominates
+    assert sum(e.tenant == "p" for e in a) > sum(e.tenant == "f" for e in a)
+    assert len({e.rhs_seed for e in a}) == 32       # unique per event
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="n_requests"):
+        make_schedule(0, 10.0)
+    with pytest.raises(ValueError, match="rate_hz"):
+        make_schedule(4, 0.0)
+
+
+def test_make_rhs_deterministic_shapes():
+    sched = make_schedule(4, 10.0, seed=1)
+    b1 = make_rhs(25, sched[0])
+    b2 = make_rhs(25, sched[0])
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.shape == (25,) and b1.dtype == np.float32
+    assert not np.array_equal(b1, make_rhs(25, sched[1]))
+    wide = make_schedule(2, 10.0, seed=1, width=3)
+    assert make_rhs(25, wide[0]).shape == (25, 3)
+
+
+def test_replay_sync_and_daemon_agree_on_workload():
+    """Both drivers over the same tiny schedule: zero errors, one latency
+    sample per request, per-tenant sample counts match the schedule."""
+    svc = SolverService(alpha=0.1)
+    g = grid2d(5, 5, seed=0)
+    h = svc.register(g)
+    svc.warmup(h, widths=[1, 2, 4, 8])
+    sched = make_schedule(8, 200.0, seed=3, tenants=(("p", 3.0), ("f", 1.0)))
+
+    sync_rep = replay_sync(svc, h, sched)
+    with SolverDaemon(svc, max_batch_delay_ms=10.0) as daemon:
+        daemon_rep = replay_daemon(daemon, h, sched)
+
+    for rep in (sync_rep, daemon_rep):
+        assert rep.errors == 0
+        assert rep.n_requests == 8
+        assert len(rep.latencies_ms) == 8
+        assert all(ms > 0 for ms in rep.latencies_ms)
+        assert rep.p99_ms >= rep.p50_ms > 0
+        assert rep.throughput_rps > 0
+        by_tenant = {t: len(ls) for t, ls in rep.tenant_latencies_ms.items()}
+        want = {}
+        for e in sched:
+            want[e.tenant] = want.get(e.tenant, 0) + 1
+        assert by_tenant == want
+        rec = rep.to_record()
+        assert rec["p50_ms"] > 0 and rec["p99_ms"] >= rec["p50_ms"]
+        assert set(rec["tenants"]) == set(want)
+    assert sync_rep.mode == "sync" and daemon_rep.mode == "daemon"
+
+
+def test_report_percentiles_empty_safe():
+    from repro.serve import ReplayReport
+    rep = ReplayReport(mode="sync", rate_hz=1.0, n_requests=0,
+                       latencies_ms=[], duration_s=0.0)
+    assert rep.p50_ms == 0.0 and rep.p99_ms == 0.0
+    assert rep.throughput_rps == 0.0
+    assert rep.to_record()["max_ms"] == 0.0

@@ -417,3 +417,30 @@ def test_service_surfaces_disk_caps_in_stats(tmp_path):
     stats = svc.stats()
     assert stats["cache"]["disk_max_entries"] == 4
     assert stats["cache"]["disk_entries"] == 1
+
+
+def test_stale_ticket_result_raises_clear_error_without_flushing_others():
+    """Regression: ``result()`` on an unresolved ticket that is NOT in its
+    service's pending queue used to flush anyway — pointlessly solving
+    unrelated pending work and then failing with a baffling "was it
+    submitted to this service?" message.  It must diagnose the stale
+    ticket immediately and leave other queued work untouched."""
+    g = mesh2d(9, 9, seed=20)
+    svc = SolverService(alpha=0.05, precond="none")
+    h = svc.register(g)
+    b = _rhs(g, k=2, seed=21)
+    stale = svc.submit(SolveRequest(graph=h, b=b[:, 0]))
+    # Simulate the race the bug shipped under: the queue drained without
+    # this ticket ever resolving (a consumer dropped its entry).
+    with svc._lock:
+        svc._pending.clear()
+        svc._pending_columns = 0
+    live = svc.submit(SolveRequest(graph=h, b=b[:, 1]))
+    flushes = svc.stats()["scheduler"]["flushes"]
+    with pytest.raises(RuntimeError, match="stale .*or belongs to another"):
+        stale.result()
+    assert not stale.done()
+    # the diagnosis came WITHOUT flushing the unrelated live ticket
+    assert svc.stats()["scheduler"]["flushes"] == flushes
+    assert not live.done()
+    assert live.result().converged          # the live path is unharmed
