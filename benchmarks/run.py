@@ -8,6 +8,7 @@
   pdgrass_perf    -> §Perf     (recovery-engine hillclimbing)
   kernels_bench   -> Pallas kernel shape sweep (interpret mode on CPU)
   solver_bench    -> solver service vs per-call host path
+  spectral_bench  -> batched resistance queries + embedding workloads
 
 Prints ``name,us_per_call,derived`` CSV per section; roofline terms for
 the (arch x shape) cells come from ``repro.launch.dryrun`` artifacts and
@@ -45,8 +46,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (fig1_summary, kernels_bench, pdgrass_perf,
-                            replay_bench, solver_bench, table2_quality,
-                            table3_jbp, table4_scaling)
+                            replay_bench, solver_bench, spectral_bench,
+                            table2_quality, table3_jbp, table4_scaling)
     from benchmarks.common import write_bench_json
 
     if args.trace:
@@ -62,6 +63,7 @@ def main(argv=None) -> None:
         ("kernels_bench", kernels_bench.main),
         ("solver_bench", solver_bench.main),
         ("replay_bench", replay_bench.main),
+        ("spectral_bench", spectral_bench.main),
     ]
     section_argv = ["--quick"] if args.smoke else []
     solver_json = None

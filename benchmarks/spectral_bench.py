@@ -1,0 +1,186 @@
+"""Spectral-services benchmark: batched resistance queries + embeddings.
+
+Two questions, each with a hard assertion CI can trip on:
+
+  * **Batching wins.**  ``q`` effective-resistance queries submitted
+    one-by-one pay ``q`` flushes of one ±e_uv column each; the batched
+    endpoint stacks them into chunked ``[n, chunk]`` RHS blocks that land
+    in a **single flush group** per (graph, config) — asserted via the
+    scheduler's group counter, not inferred from timings.  A third row
+    replays the batch against the result cache (zero solves).
+  * **The embedding workload ranks sparsifiers.**  Fiedler/k=2 embeddings
+    run the same block inverse iteration under the pdGRASS and feGRASS
+    preconditioner configs through one service — iteration counts (outer
+    and summed PCG) become a downstream-task quality comparison, the
+    SF-GRASS framing.
+
+    PYTHONPATH=src python benchmarks/spectral_bench.py [--quick]
+        [--json out.json] [--trace trace.json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import write_bench_json  # noqa: E402
+
+from repro.core import barabasi_albert, grid2d, mesh2d  # noqa: E402
+from repro.pipeline import fegrass_config, pdgrass_config  # noqa: E402
+from repro.solver import SolverService  # noqa: E402
+from repro.spectral import (ResistanceCache,  # noqa: E402
+                            effective_resistance, spectral_embedding)
+
+
+def sample_pairs(n: int, q: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, 2 * q)
+    v = rng.integers(0, n, 2 * q)
+    keep = u != v
+    pairs = np.unique(np.stack([np.minimum(u[keep], v[keep]),
+                                np.maximum(u[keep], v[keep])], axis=1),
+                      axis=0)
+    rng.shuffle(pairs)
+    return pairs[:q]
+
+
+def bench_resistance(name, g, q=256, chunk=128, tol=1e-6):
+    """One-by-one vs batched vs cache-replay resistance queries."""
+    svc = SolverService(pipeline=pdgrass_config(alpha=0.05, chunk=512))
+    handle = svc.register(g)
+    pairs = sample_pairs(g.n, q)
+    q = pairs.shape[0]
+
+    # Warm the artifact cache AND the jit closures for both RHS widths
+    # (k=1 for the serial mode, the chunked widths for the batched mode)
+    # so every mode times steady-state serving, not compilation.
+    effective_resistance(svc, handle, pairs, tol=tol, chunk=chunk,
+                         cache=ResistanceCache())
+    effective_resistance(svc, handle, pairs[:1], tol=tol,
+                         cache=ResistanceCache())
+
+    t0 = time.perf_counter()
+    serial_cache = ResistanceCache()
+    r_serial = np.concatenate([
+        effective_resistance(svc, handle, p.reshape(1, 2), tol=tol,
+                             cache=serial_cache)
+        for p in pairs])
+    t_serial = time.perf_counter() - t0
+
+    groups_before = svc.stats()["scheduler"]["groups"]
+    batch_cache = ResistanceCache()
+    t0 = time.perf_counter()
+    r_batch = effective_resistance(svc, handle, pairs, tol=tol, chunk=chunk,
+                                   cache=batch_cache)
+    t_batch = time.perf_counter() - t0
+    groups = svc.stats()["scheduler"]["groups"] - groups_before
+    assert groups == 1, (
+        f"{name}: batched queries split into {groups} flush groups — the "
+        f"endpoint must submit every chunk before resolving the first so "
+        f"one (graph, config) flush group serves the whole call")
+    np.testing.assert_allclose(r_batch, r_serial, rtol=1e-4, atol=1e-9,
+                               err_msg=f"{name}: batched resistances drifted "
+                                       f"from the one-by-one path")
+
+    t0 = time.perf_counter()
+    r_replay = effective_resistance(svc, handle, pairs, tol=tol, chunk=chunk,
+                                    cache=batch_cache)
+    t_replay = time.perf_counter() - t0
+    assert batch_cache.hits >= q and np.array_equal(r_batch, r_replay)
+
+    speedup = t_serial / max(t_batch, 1e-9)
+    assert speedup > 1, (
+        f"{name}: batched queries ({t_batch*1e3:.1f} ms) did not beat "
+        f"one-by-one submission ({t_serial*1e3:.1f} ms) with warm caches")
+    print(f"  resistance q={q}: serial={t_serial*1e3:8.1f} ms  "
+          f"batched={t_batch*1e3:8.1f} ms ({speedup:6.1f}x, "
+          f"{groups} flush group)  cache_replay={t_replay*1e3:6.2f} ms")
+    return {"q": q, "chunk": chunk, "serial_ms": t_serial * 1e3,
+            "batched_ms": t_batch * 1e3, "speedup": speedup,
+            "flush_groups": groups, "replay_ms": t_replay * 1e3,
+            "cache": batch_cache.stats}
+
+
+def bench_embedding(name, g, k=2, tol=1e-3):
+    """Embedding iteration counts under pd vs fe preconditioner configs."""
+    svc = SolverService(pipeline=pdgrass_config(alpha=0.05, chunk=512))
+    handle = svc.register(g)
+    out = {}
+    for tag, cfg in [("pd", None),
+                     ("fe", fegrass_config(alpha=0.05, chunk=512))]:
+        t0 = time.perf_counter()
+        emb = spectral_embedding(svc, handle, k=k, tol=tol, pipeline=cfg)
+        dt = time.perf_counter() - t0
+        assert emb.converged, (
+            f"{name}/{tag}: embedding did not reach tol={tol} "
+            f"(residuals {emb.residuals})")
+        out[tag] = {"outer_iters": emb.iterations,
+                    "solve_iters": emb.solve_iters,
+                    "lambda2": float(emb.values[0]),
+                    "max_residual": float(emb.residuals.max()),
+                    "wall_ms": dt * 1e3}
+        print(f"  embedding[{tag}] k={k}: outer={emb.iterations:<3d} "
+              f"pcg_iters={emb.solve_iters:<6d} lam2={emb.values[0]:.4f} "
+              f"resid={emb.residuals.max():.1e}  ({dt*1e3:.0f} ms)")
+    # same operator, same start block — lambda2 must agree across configs
+    d_lam = abs(out["pd"]["lambda2"] - out["fe"]["lambda2"])
+    assert d_lam <= max(1e-6, 1e-3 * abs(out["pd"]["lambda2"])), (
+        f"{name}: lambda2 drifted between preconditioner configs "
+        f"({out['pd']['lambda2']} vs {out['fe']['lambda2']})")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny graphs, few queries — smoke-test the path")
+    ap.add_argument("--q", type=int, default=None,
+                    help="resistance query count per graph")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable results (schema bench-v1)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable span tracing and export a Chrome trace")
+    args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.obs import enable_tracing
+        enable_tracing()
+
+    if args.quick:
+        graphs = {"grid-16x16": grid2d(16, 16, seed=0)}
+        q, chunk, k = args.q or 48, 32, 2
+    else:
+        graphs = {
+            "mesh2d-40x40": mesh2d(40, 40, seed=0),
+            "ba-2000": barabasi_albert(2000, 3, seed=1),
+        }
+        q, chunk, k = args.q or 256, 128, 2
+
+    records = []
+    for name, g in graphs.items():
+        print(f"\n{name}: |V|={g.n} |E|={g.m}")
+        rec = {"graph": name, "n": g.n, "m": g.m,
+               "resistance": bench_resistance(name, g, q=q, chunk=chunk),
+               "embedding": bench_embedding(name, g, k=k)}
+        records.append(rec)
+
+    speedups = [r["resistance"]["speedup"] for r in records]
+    print(f"\nbatched resistance queries beat one-by-one submission on "
+          f"every graph ({', '.join(f'{s:.1f}x' for s in speedups)}), "
+          f"each through a single flush group")
+    if args.json:
+        write_bench_json(args.json, "spectral_bench", records,
+                         extra={"quick": args.quick, "q": q})
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().export_chrome(args.trace)
+        print(f"wrote {args.trace} "
+              f"({len(get_tracer().events())} span events)")
+
+
+if __name__ == "__main__":
+    main()

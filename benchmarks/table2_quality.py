@@ -8,6 +8,27 @@ in the header).  SuiteSparse graphs are not available offline; the suite
 spans the same structural families (grids/meshes ~ census+FEM rows,
 BA/star ~ com-* hub rows, WS/regular ~ collaboration rows).
 
+Beyond the paper's PCG-iteration metric, ``--quality`` rows judge each
+sparsifier on the *downstream tasks* the sparsifier exists for (host f64
+oracles, deterministic):
+
+  * ``er_fe``/``er_pd``     — effective-resistance distortion: median
+    relative error of ``R_P(u, v)`` on the sparsifier vs the exact
+    ``R_G(u, v)`` (grounded sparse-LU solves — the dense-pinv oracle
+    without the dense cost).
+  * ``fied_fe``/``fied_pd`` — Fiedler fidelity: the sparsifier's Fiedler
+    vector scored by its Rayleigh quotient on ``L_G``, as relative excess
+    over the true lambda2 (0 = perfect spectral agreement).
+  * ``itp_fe``/``itp_pd``   — harmonic interpolation error: label scores
+    propagated on the sparsifier vs on ``G`` (mean abs deviation on the
+    held-out vertices).
+
+Score-stage calibration columns (the ``er_exact`` ground truth closes the
+PR 2 ER-sampling item): ``iter_erx`` is the PCG iteration count with the
+exact-leverage-score ranking, and ``ers_mean``/``ers_std`` are the seed
+variance band of the stochastic ``er_sample`` ranking beside the
+deterministic ``w_times_r`` column.
+
     PYTHONPATH=src python benchmarks/table2_quality.py [--quick]
 """
 from __future__ import annotations
@@ -22,18 +43,106 @@ from repro.core.pcg import pcg_host
 from repro.pipeline import Pipeline, config_diff, fegrass_config, pdgrass_config
 
 
-def run(scale: str = "small", alphas=(0.02, 0.05, 0.10), quality: bool = True):
+# ---------------------------------------------------------------------------
+# Host f64 downstream-task oracles (grounded sparse LU; no dense pinv)
+# ---------------------------------------------------------------------------
+
+def _grounded_lu(L):
+    """Sparse LU of ``L`` with vertex 0 grounded — solving the grounded
+    system and re-centering applies ``L^+`` exactly on ``range(L)``."""
+    from scipy.sparse.linalg import splu
+
+    A = L.tocsc()[1:, :][:, 1:]
+    return splu(A)
+
+
+def _lsolve(lu, b):
+    """``L^+ b`` for mean-zero ``b`` ([n] or [n, q]) via the grounded LU."""
+    x = np.zeros_like(b)
+    x[1:] = lu.solve(b[1:])
+    return x - x.mean(axis=0)
+
+
+def _resistances(lu, n, pairs):
+    """Exact ``R(u, v) = x_u - x_v`` with ``L x = e_u - e_v``, batched."""
+    q = len(pairs)
+    B = np.zeros((n, q))
+    B[pairs[:, 0], np.arange(q)] = 1.0
+    B[pairs[:, 1], np.arange(q)] -= 1.0
+    X = _lsolve(lu, B)
+    return X[pairs[:, 0], np.arange(q)] - X[pairs[:, 1], np.arange(q)]
+
+
+def _fiedler_pair(L, n, iters=60, seed=0):
+    """(lambda2, v2) of Laplacian ``L`` by deflated inverse iteration."""
+    lu = _grounded_lu(L)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    x -= x.mean()
+    x /= np.linalg.norm(x)
+    for _ in range(iters):
+        x = _lsolve(lu, x)
+        x /= np.linalg.norm(x)
+    lam = float(x @ (L @ x))
+    return lam, x
+
+
+def _harmonic(L, bmask, xb):
+    """Dirichlet solve ``L_II x_I = -L_IB x_B`` via sparse LU (f64)."""
+    from scipy.sparse.linalg import splu
+
+    Lc = L.tocsc()
+    I = np.flatnonzero(~bmask)
+    B = np.flatnonzero(bmask)
+    x = np.zeros(L.shape[0])
+    x[B] = xb
+    LII = Lc[I, :][:, I]
+    LIB = Lc[I, :][:, B]
+    x[I] = splu(LII).solve(-LIB @ xb)
+    return x
+
+
+def downstream_quality(g, spars, pairs, lam_g, v_g, lab_idx):
+    """The three task-level quality numbers of one sparsifier vs ``G``."""
+    L_g = g.laplacian()
+    L_p = spars.laplacian()
+
+    r_g = _resistances(_grounded_lu(L_g), g.n, pairs)
+    r_p = _resistances(_grounded_lu(L_p), g.n, pairs)
+    er = float(np.median(np.abs(r_p - r_g) / np.maximum(r_g, 1e-30)))
+
+    _, v_p = _fiedler_pair(L_p, g.n)
+    rayleigh = float(v_p @ (L_g @ v_p))
+    fied = max(rayleigh - lam_g, 0.0) / lam_g
+
+    bmask = np.zeros(g.n, dtype=bool)
+    bmask[lab_idx] = True
+    xb = np.sign(v_g[lab_idx])
+    x_g = _harmonic(L_g, bmask, xb)
+    x_p = _harmonic(L_p, bmask, xb)
+    itp = float(np.mean(np.abs(x_p - x_g)[~bmask]))
+    return er, fied, itp
+
+
+def run(scale: str = "small", alphas=(0.02, 0.05, 0.10), quality: bool = True,
+        er_seeds=(0, 1, 2), n_pairs: int = 16):
     rows = []
     for gname, g in suite(scale).items():
         # Shared steps 1-3: same tree + score stages for both configs (the
         # paper's apples-to-apples protocol), prepared once per graph.
         prep = Pipeline(pdgrass_config()).prepare(g)
-        base_iters = None
+        base_iters = lam_g = v_g = pairs = lab_idx = None
         if quality:
             rng = np.random.default_rng(0)
             b = rng.standard_normal(g.n)
             b -= b.mean()
             base_iters = pcg_host(g.laplacian(), b).iters
+            u = rng.integers(0, g.n, 4 * n_pairs)
+            v = rng.integers(0, g.n, 4 * n_pairs)
+            keep = u != v
+            pairs = np.stack([u[keep], v[keep]], axis=1)[:n_pairs]
+            lam_g, v_g = _fiedler_pair(g.laplacian(), g.n)
+            lab_idx = rng.choice(g.n, size=max(g.n // 10, 2), replace=False)
         for alpha in alphas:
             fe_pipe = Pipeline(fegrass_config(alpha=alpha))
             pd_pipe = Pipeline(pdgrass_config(alpha=alpha))
@@ -54,6 +163,24 @@ def run(scale: str = "small", alphas=(0.02, 0.05, 0.10), quality: bool = True):
                 row["iter_pd"] = quality_iters(g, pd)
                 row["iter_ratio"] = round(row["iter_fe"] /
                                           max(row["iter_pd"], 1), 2)
+                # Score-stage calibration: exact leverage scores (ground
+                # truth) and the er_sample seed variance band around them.
+                erx = Pipeline(pdgrass_config(
+                    alpha=alpha, score_mode="er_exact")).run(g)
+                row["iter_erx"] = quality_iters(g, erx)
+                ers = [quality_iters(g, Pipeline(pdgrass_config(
+                    alpha=alpha, score_mode="er_sample", seed=s)).run(g))
+                    for s in er_seeds]
+                row["ers_mean"] = round(float(np.mean(ers)), 1)
+                row["ers_std"] = round(float(np.std(ers)), 1)
+                # Downstream-task quality: the sparsifier judged on the
+                # tasks (resistance, Fiedler, interpolation), not PCG alone.
+                for tag, sp in (("fe", fe), ("pd", pd)):
+                    er, fied, itp = downstream_quality(
+                        g, sp, pairs, lam_g, v_g, lab_idx)
+                    row[f"er_{tag}"] = round(er, 4)
+                    row[f"fied_{tag}"] = round(fied, 4)
+                    row[f"itp_{tag}"] = round(itp, 4)
             rows.append(row)
     return rows
 
@@ -63,13 +190,16 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="tiny graphs, one alpha — smoke-test the code path")
     ap.add_argument("--scale", default=None, choices=["tiny", "small"])
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="er_sample variance-band seed count")
     args = ap.parse_args(argv)
     scale = args.scale or ("tiny" if args.quick else "small")
     alphas = (0.05,) if args.quick else (0.02, 0.05, 0.10)
+    n_seeds = args.seeds or (3 if args.quick else 5)
 
     diff = config_diff(pdgrass_config(), fegrass_config())
     print(f"# pdGRASS vs feGRASS config diff: {diff}")
-    rows = run(scale=scale, alphas=alphas)
+    rows = run(scale=scale, alphas=alphas, er_seeds=tuple(range(n_seeds)))
     keys = list(rows[0].keys())
     print(",".join(keys))
     for r in rows:

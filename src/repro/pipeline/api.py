@@ -70,7 +70,12 @@ class Pipeline:
                              m_off=int(off_ids.shape[0])):
                 l = lift_mod.lca(lift, ou, ov)
                 r_t = lift_mod.resistance_distance(lift, ou, ov, l)
-                score = SCORE_STAGES[cfg.score.kind](ow, r_t, cfg.score)
+                score = SCORE_STAGES[cfg.score.kind](
+                    ow, r_t, cfg.score,
+                    # runtime ctx for solver-backed stages (er_exact): the
+                    # host graph, tree membership, off-tree endpoints
+                    graph=graph, in_tree=in_tree,
+                    u=graph.src[off_ids], v=graph.dst[off_ids])
 
                 depth = lift.depth
                 beta = jnp.minimum(

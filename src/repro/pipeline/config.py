@@ -10,7 +10,8 @@ described by three named, pluggable stages
                    ``boruvka`` max-weight ST),
   * ``score``    — how off-tree edges are ranked (``w_times_r`` spectral
                    criticality / raw ``r`` resistance / ``er_sample``
-                   Gumbel-top-k effective-resistance sampling),
+                   Gumbel-top-k effective-resistance sampling / ``er_exact``
+                   true leverage scores via batched Laplacian solves),
   * ``recovery`` — which engine walks the ranked edges (``rounds`` JAX
                    round engine / ``serial`` numpy oracle / ``distributed``
                    mesh engine / ``multipass`` loose-similarity feGRASS),
@@ -46,8 +47,9 @@ class TreeConfig:
 class ScoreConfig:
     """Stage 2: the off-tree edge ranking rule."""
 
-    kind: str = "w_times_r"     # w_times_r | r | er_sample
+    kind: str = "w_times_r"     # w_times_r | r | er_sample | er_exact
     seed: int = 0               # er_sample: Gumbel-top-k sampling seed
+    tol: float = 1e-6           # er_exact: exact-resistance solve tolerance
 
 
 @dataclasses.dataclass(frozen=True)

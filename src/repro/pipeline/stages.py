@@ -4,7 +4,8 @@ Three registries, looked up by the ``kind`` strings in
 :mod:`repro.pipeline.config`:
 
   * ``TREE_STAGES``      — ``(n, src, dst, weight, TreeConfig) -> TreeResult``
-  * ``SCORE_STAGES``     — ``(w_off, r_tree, ScoreConfig) -> score [m_off]``
+  * ``SCORE_STAGES``     — ``(w_off, r_tree, ScoreConfig, **ctx) ->
+                             score [m_off]``
   * ``RECOVERY_ENGINES`` — ``(prep, target, PipelineConfig, **ctx) ->
                              (recovered_mask [graph.m] bool, stats dict)``
 
@@ -12,7 +13,9 @@ Registering a new stage is one decorated function — the GRASS family
 (GRASS, feGRASS, pdGRASS, SF-GRASS) is a grid of (scoring rule x tree
 strategy x recovery engine), and every cell is a config, not a fork.
 ``ctx`` carries runtime-only objects that don't belong in a serializable
-config (today: the device ``mesh`` for the distributed engine).
+config (the device ``mesh`` for the distributed engine; for score stages,
+the host ``graph``, the tree membership mask, and the off-tree endpoints
+``u``/``v`` that ``er_exact`` solves against).
 """
 from __future__ import annotations
 
@@ -58,19 +61,19 @@ def tree_boruvka(n, src, dst, weight, cfg: TreeConfig):
 # ---------------------------------------------------------------------------
 
 @register(SCORE_STAGES, "w_times_r")
-def score_w_times_r(w, r_t, cfg: ScoreConfig):
+def score_w_times_r(w, r_t, cfg: ScoreConfig, **_):
     """Spectral criticality w(e) * R_T(e) — the feGRASS/pdGRASS default."""
     return w * r_t
 
 
 @register(SCORE_STAGES, "r")
-def score_r(w, r_t, cfg: ScoreConfig):
+def score_r(w, r_t, cfg: ScoreConfig, **_):
     """Raw tree resistance distance (ignores the edge weight)."""
     return r_t
 
 
 @register(SCORE_STAGES, "er_sample")
-def score_er_sample(w, r_t, cfg: ScoreConfig):
+def score_er_sample(w, r_t, cfg: ScoreConfig, **_):
     """Effective-resistance sampling order (Spielman-Srivastava style).
 
     Gumbel-top-k: ranking by ``log(w * R_T) + Gumbel(seed)`` and keeping the
@@ -81,6 +84,29 @@ def score_er_sample(w, r_t, cfg: ScoreConfig):
     key = jax.random.PRNGKey(cfg.seed)
     gumbel = jax.random.gumbel(key, w.shape, dtype=w.dtype)
     return jnp.log(jnp.maximum(w * r_t, 1e-30)) + gumbel
+
+
+@register(SCORE_STAGES, "er_exact")
+def score_er_exact(w, r_t, cfg: ScoreConfig, *, graph=None, in_tree=None,
+                   u=None, v=None, **_):
+    """True leverage scores w(e) * R_G(e) from batched Laplacian solves.
+
+    Replaces the tree-resistance proxy ``R_T`` (an upper bound that can
+    badly over-rank edges shortcut elsewhere) with the exact effective
+    resistance of the *full* graph, computed on the spanning-tree-
+    preconditioned solver — the ground truth ``er_sample`` approximates.
+    ``cfg.tol`` is the per-column solve tolerance.
+    """
+    if graph is None:
+        raise ValueError("er_exact needs graph context (graph, in_tree, "
+                         "u, v) from the pipeline; bare calls only get "
+                         "the tree proxy")
+    # Late import: pipeline <- spectral <- solver <- pipeline would cycle
+    # at module load; by call time every module is initialized.
+    from repro.spectral.resistance import exact_offtree_resistances
+
+    r = exact_offtree_resistances(graph, in_tree, u, v, tol=cfg.tol)
+    return w * jnp.asarray(r, dtype=w.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,12 @@ Three mechanisms, one thread:
     the oldest queued request's deadline (``submit time +
     max_batch_delay_ms`` — the SLO knob) or until ``max_batch_columns``
     RHS columns are queued, whichever comes first, then drains a batch
-    through the service's (graph, config)-group scheduler.  pdGRASS's
+    through the service's (graph, config)-group scheduler.  Requests
+    carrying ``SolveRequest(deadline_ms=...)`` get a queue-side TTL: an
+    entry still queued that long past submit is *expired* — failed with a
+    typed :class:`~repro.solver.requests.DeadlineExceededError` instead of
+    solved — so a saturated daemon sheds dead work rather than burning
+    solve time on answers nobody is waiting for.  pdGRASS's
     organizing move — disjoint subtasks with no cross-dependencies — is
     what makes those fingerprint groups safe to dispatch from a daemon
     loop: groups fail independently, so one tenant's poisoned request
@@ -56,8 +61,8 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.obs import get_tracer
-from repro.solver.requests import (AdmissionError, GraphHandle, SolveRequest,
-                                   SolveTicket)
+from repro.solver.requests import (AdmissionError, DeadlineExceededError,
+                                   GraphHandle, SolveRequest, SolveTicket)
 from repro.solver.service import SolverService
 
 
@@ -95,6 +100,7 @@ class _Lane:
     rejected: int = 0
     solved: int = 0
     failed: int = 0
+    expired: int = 0             # queue-side TTL expiries (deadline_ms)
 
 
 @dataclasses.dataclass
@@ -108,6 +114,7 @@ class _Entry:
     cols: int
     t_submit: float              # daemon clock
     deadline: float              # t_submit + max_batch_delay
+    expiry: Optional[float] = None  # t_submit + deadline_ms (queue TTL)
 
 
 class SolverDaemon:
@@ -162,6 +169,7 @@ class SolverDaemon:
         self._cycles = 0
         self._triggers = {"deadline": 0, "size": 0, "drain": 0}
         self._slo_violations = 0
+        self._expired = 0
         if autostart:
             self.start()
 
@@ -254,7 +262,9 @@ class SolverDaemon:
             self._queue.append(_Entry(
                 ticket=ticket, handle=handle, request=request, tenant=tenant,
                 cols=cols, t_submit=now,
-                deadline=now + self.max_batch_delay_ms / 1e3))
+                deadline=now + self.max_batch_delay_ms / 1e3,
+                expiry=(now + request.deadline_ms / 1e3
+                        if request.deadline_ms is not None else None)))
             lane.pending_columns += cols
             lane.submitted += 1
             self._pending_columns += cols
@@ -269,6 +279,31 @@ class SolverDaemon:
         return (self.max_batch_columns is not None
                 and self._pending_columns >= self.max_batch_columns)
 
+    def _expire_locked(self, now: float) -> None:
+        """Queue-side TTL sweep: fail every still-queued entry whose
+        ``deadline_ms`` expiry has passed with a typed
+        :class:`DeadlineExceededError`, without solving it.  Runs under the
+        condition lock; ``_fail`` only sets the ticket's outcome + event,
+        so waking waiters from here is safe."""
+        expired = [e for e in self._queue
+                   if e.expiry is not None and e.expiry <= now]
+        if not expired:
+            return
+        dead = set(id(e) for e in expired)
+        self._queue = [e for e in self._queue if id(e) not in dead]
+        metrics = self.service.metrics
+        for e in expired:
+            self._charge_locked(e)
+            lane = self._lanes[e.tenant]
+            lane.expired += 1
+            self._expired += 1
+            metrics.inc("serve.expired")
+            metrics.inc(f"serve.tenant.{e.tenant}.expired")
+            e.ticket._fail(DeadlineExceededError(
+                int(e.ticket), e.request.deadline_ms,
+                (now - e.t_submit) * 1e3, tenant=e.tenant))
+        metrics.set_gauge("serve.queue_depth", len(self._queue))
+
     def _run(self) -> None:
         while True:
             with self._cond:
@@ -280,11 +315,24 @@ class SolverDaemon:
                     if not self._queue:
                         self._cond.wait()
                         continue
+                    now = self._clock()
+                    self._expire_locked(now)
+                    if not self._queue:
+                        continue
                     if self._size_ready_locked():
                         trigger = "size"
                         break
-                    wait = self._queue[0].deadline - self._clock()
+                    # Sleep until the batch deadline OR the earliest TTL
+                    # expiry, whichever is sooner — an expiry must not wait
+                    # out a longer batch window to be honored.
+                    wake = self._queue[0].deadline
+                    for e in self._queue:
+                        if e.expiry is not None and e.expiry < wake:
+                            wake = e.expiry
+                    wait = wake - now
                     if wait <= 0:
+                        # every expiry <= now was just swept, so an overdue
+                        # wake-up time can only be the batch deadline
                         trigger = "deadline"
                         break
                     self._cond.wait(wait)
@@ -299,6 +347,9 @@ class SolverDaemon:
         """Settle whatever is still queued at close time: one final drain
         cycle, or a deterministic failure of every ticket."""
         with self._cond:
+            # honor TTLs one last time: entries already past deadline get
+            # the precise DeadlineExceededError, not a generic shutdown one
+            self._expire_locked(self._clock())
             batch, self._queue = self._queue, []
             for e in batch:
                 self._charge_locked(e)
@@ -438,6 +489,7 @@ class SolverDaemon:
                     "rejected": lane.rejected,
                     "solved": lane.solved,
                     "failed": lane.failed,
+                    "expired": lane.expired,
                 } for name, lane in self._lanes.items()}
             return copy.deepcopy({
                 "daemon": {
@@ -451,6 +503,7 @@ class SolverDaemon:
                     "max_batch_columns": self.max_batch_columns,
                     "slo_budget_ms": self.slo_budget_ms,
                     "slo_violations": self._slo_violations,
+                    "expired": self._expired,
                 },
                 "tenants": tenants,
             })

@@ -33,8 +33,9 @@ from repro.solver.device_pcg import (BatchedPCGResult, batched_pcg,
 from repro.solver.hierarchy import (Hierarchy, Level, build_hierarchy,
                                     device_contract, device_matching,
                                     sharded_contract, subgraph)
-from repro.solver.requests import (AdmissionError, GraphHandle, GraphStore,
-                                   SolveRequest, SolveResponse, SolveTicket)
+from repro.solver.requests import (AdmissionError, DeadlineExceededError,
+                                   GraphHandle, GraphStore, SolveRequest,
+                                   SolveResponse, SolveTicket)
 from repro.solver.service import SolverService
 from repro.solver.sharded import make_sharded_solver, shard_ell_slabs
 
@@ -45,6 +46,6 @@ __all__ = [
     "make_solver", "make_vcycle", "make_sharded_solver", "shard_ell_slabs",
     "LRUCache", "artifact_key", "content_fingerprint", "graph_fingerprint",
     "pipeline_fingerprint",
-    "AdmissionError", "GraphHandle", "GraphStore", "SolveRequest",
-    "SolveResponse", "SolveTicket", "SolverService",
+    "AdmissionError", "DeadlineExceededError", "GraphHandle", "GraphStore",
+    "SolveRequest", "SolveResponse", "SolveTicket", "SolverService",
 ]

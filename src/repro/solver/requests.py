@@ -79,7 +79,14 @@ class GraphStore:
     With ``persist_dir`` set the store survives restarts: every newly
     registered graph is written as ``<fingerprint>.npz`` (the canonical
     edge arrays, atomic tmp-file + ``os.replace`` write), and construction
-    rehydrates every persisted graph back into handles.  Rehydration
+    rehydrates every persisted graph back into handles.  The on-disk tier
+    is bounded by ``max_entries`` / ``max_bytes`` (``None`` = unbounded)
+    with least-recently-used eviction, exactly like the artifact disk
+    tier: registering a graph whose file already exists refreshes its
+    mtime, pruning evicts oldest-mtime files first, and the file just
+    written is never the victim — a single graph larger than ``max_bytes``
+    still persists.  Eviction only trims disk; live in-memory handles are
+    untouched (a re-register of an evicted graph simply re-persists it).  Rehydration
     trusts the persisted digest (the filename, cross-checked against the
     digest stored *inside* the file) instead of re-hashing the edge
     arrays, so a restarted service hits its disk artifact cache with zero
@@ -91,13 +98,18 @@ class GraphStore:
     producer threads feeding a background flusher.
     """
 
-    def __init__(self, persist_dir: Optional[str] = None):
+    def __init__(self, persist_dir: Optional[str] = None,
+                 max_entries: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
         self._handles: Dict[str, GraphHandle] = {}
         self._lock = threading.Lock()
         self.hash_events = 0   # O(m) content hashes this store triggered
         self.persist_dir = persist_dir
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self.persisted = 0     # graphs written to persist_dir by this store
         self.rehydrated = 0    # handles loaded from persist_dir at init
+        self.persist_evictions = 0  # files pruned by the entries/bytes caps
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
             self._rehydrate()
@@ -127,9 +139,52 @@ class GraphStore:
             self._handles[fp] = GraphHandle(graph=g, fingerprint=fp)
             self.rehydrated += 1
 
+    def _disk_entries(self):
+        """[(path, mtime, bytes)] for every graph file in ``persist_dir``."""
+        out = []
+        for name in os.listdir(self.persist_dir):
+            if not name.endswith(".npz"):
+                continue
+            path = os.path.join(self.persist_dir, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue  # concurrently evicted by another process
+            out.append((path, st.st_mtime, st.st_size))
+        return out
+
+    def _prune_disk(self, keep: str) -> None:
+        """Evict least-recently-used graph files until under both caps;
+        never evicts ``keep`` (the path just written/refreshed)."""
+        if self.max_entries is None and self.max_bytes is None:
+            return
+        entries = sorted(self._disk_entries(), key=lambda e: e[1])
+        total = sum(size for _, _, size in entries)
+        count = len(entries)
+        for path, _, size in entries:
+            over = ((self.max_entries is not None
+                     and count > self.max_entries)
+                    or (self.max_bytes is not None
+                        and total > self.max_bytes))
+            if not over:
+                break
+            if path == keep:
+                continue
+            try:
+                os.remove(path)
+            except OSError:
+                continue
+            self.persist_evictions += 1
+            count -= 1
+            total -= size
+
     def _persist(self, handle: GraphHandle) -> None:
         path = self._path(handle.fingerprint)
         if os.path.exists(path):
+            try:
+                os.utime(path)  # refresh recency for mtime eviction
+            except OSError:
+                pass
             return
         g = handle.graph
         fd, tmp = tempfile.mkstemp(dir=self.persist_dir, suffix=".tmp")
@@ -145,6 +200,7 @@ class GraphStore:
                 pass
             raise
         self.persisted += 1
+        self._prune_disk(keep=path)
 
     def register(self, graph: Union[Graph, GraphHandle]) -> GraphHandle:
         if isinstance(graph, GraphHandle):
@@ -197,9 +253,15 @@ class GraphStore:
         out = {"graphs": len(self._handles),
                "hash_events": self.hash_events}
         if self.persist_dir:
+            entries = self._disk_entries()
             out.update({"persist_dir": self.persist_dir,
                         "persisted": self.persisted,
-                        "rehydrated": self.rehydrated})
+                        "rehydrated": self.rehydrated,
+                        "persist_entries": len(entries),
+                        "persist_bytes": sum(s for _, _, s in entries),
+                        "persist_evictions": self.persist_evictions,
+                        "max_entries": self.max_entries,
+                        "max_bytes": self.max_bytes})
         return out
 
 
@@ -225,6 +287,28 @@ class AdmissionError(RuntimeError):
             f"and resubmit")
 
 
+class DeadlineExceededError(RuntimeError):
+    """A queued request expired before any flusher picked it up.
+
+    Raised out of ``ticket.result()`` when a :class:`SolveRequest` carried
+    ``deadline_ms`` and spent longer than that in the daemon's queue — the
+    work was dropped unsolved (solving it would be wasted effort: the
+    caller has already moved on).  Carries the contract and the overrun.
+    """
+
+    def __init__(self, ticket_id: int, deadline_ms: float, waited_ms: float,
+                 tenant: Optional[str] = None):
+        self.ticket_id = ticket_id
+        self.deadline_ms = deadline_ms
+        self.waited_ms = waited_ms
+        self.tenant = tenant
+        who = f" (tenant {tenant!r})" if tenant is not None else ""
+        super().__init__(
+            f"ticket {ticket_id}{who} expired in queue: waited "
+            f"{waited_ms:.1f}ms against a {deadline_ms:.1f}ms deadline — "
+            f"the daemon is saturated or the deadline is too tight")
+
+
 @dataclasses.dataclass
 class SolveRequest:
     """One Laplacian solve: ``L_G x = b`` under a per-request contract.
@@ -234,6 +318,13 @@ class SolveRequest:
     service-wide :class:`PipelineConfig` for this request only; requests
     with distinct configs are scheduled as separate groups sharing the
     flush.
+
+    ``deadline_ms`` is a *queue-side* TTL honored by the daemon: a request
+    still waiting in the queue that long past submit is expired with
+    :class:`DeadlineExceededError` instead of being solved.  It bounds
+    staleness, not solve time — once batched, a solve always completes.
+    The synchronous service ignores it (flushes there happen on the
+    caller's own thread, so there is no queue to go stale in).
     """
 
     graph: Union[Graph, GraphHandle]
@@ -241,6 +332,7 @@ class SolveRequest:
     tol: float = 1e-5
     maxiter: int = 2000
     pipeline: Optional[PipelineConfig] = None
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass

@@ -85,6 +85,8 @@ class SolverService:
                  max_refine: int = 3,
                  pipeline: Optional[PipelineConfig] = None,
                  store: Optional[GraphStore] = None,
+                 store_max_entries: Optional[int] = None,
+                 store_max_bytes: Optional[int] = None,
                  contraction: Optional[str] = None,
                  max_pending_columns: Optional[int] = None,
                  mesh=None, shard_axis: str = "data",
@@ -95,7 +97,11 @@ class SolverService:
         ``SolveRequest(pipeline=...)``.  When omitted, a pdGRASS config is
         built from ``alpha`` (default 0.05).  Passing both is a conflict:
         alpha lives inside the config.  ``store`` shares a
-        :class:`GraphStore` between services.
+        :class:`GraphStore` between services;
+        ``store_max_entries``/``store_max_bytes`` cap the default store's
+        persisted ``graphstore/`` tier (mtime-LRU eviction, mirroring the
+        artifact ``disk_max_*`` caps) and are a conflict with an explicit
+        ``store`` — caps live on the store you build.
 
         ``contraction`` selects the hierarchy-build matching path
         (``"device"`` propose/accept rounds, ``"host"`` sequential oracle,
@@ -151,8 +157,15 @@ class SolverService:
         # rehydrates its handles AND hits the persisted artifacts — no
         # caller re-registers edge arrays, no O(m) re-fingerprints.
         if store is None:
-            store = GraphStore(persist_dir=os.path.join(
-                disk_dir, "graphstore")) if disk_dir else GraphStore()
+            store = GraphStore(
+                persist_dir=(os.path.join(disk_dir, "graphstore")
+                             if disk_dir else None),
+                max_entries=store_max_entries, max_bytes=store_max_bytes)
+        elif store_max_entries is not None or store_max_bytes is not None:
+            raise ValueError(
+                "store_max_entries/store_max_bytes configure the default "
+                "store — with an explicit store=, set the caps on it "
+                "(GraphStore(max_entries=..., max_bytes=...))")
         self.store = store
         # Per-service metrics registry (``solver.*`` / ``cache.*``
         # namespaces): two services never share counters, so fresh-service
@@ -339,6 +352,9 @@ class SolverService:
                     f"request.pipeline wants a PipelineConfig, got "
                     f"{type(request.pipeline).__name__}")
             validate_config(request.pipeline)
+        if request.deadline_ms is not None and not request.deadline_ms > 0:
+            raise ValueError(
+                f"deadline_ms must be positive, got {request.deadline_ms}")
 
     def submit(self, request: SolveRequest) -> SolveTicket:
         """Queue a request; returns a :class:`SolveTicket` future resolved

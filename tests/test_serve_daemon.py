@@ -26,7 +26,8 @@ import pytest
 from repro.core import grid2d
 from repro.obs import get_tracer
 from repro.serve import DaemonShutdownError, SolverDaemon, TenantConfig
-from repro.solver import AdmissionError, SolveRequest, SolverService
+from repro.solver import (AdmissionError, DeadlineExceededError,
+                          SolveRequest, SolverService)
 from repro.pipeline import fegrass_config
 
 DELAY_MS = 40.0
@@ -351,3 +352,63 @@ def test_constructor_validation(svc):
                      autostart=False)
     with pytest.raises(ValueError, match="weight"):
         TenantConfig(weight=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Queue-side TTL: SolveRequest(deadline_ms=...) expiry
+# ---------------------------------------------------------------------------
+
+def test_expiry_manual_clock_fails_only_deadlined_ticket(svc):
+    """Deterministic TTL: with an injected clock, an entry whose
+    ``deadline_ms`` has lapsed is expired at the next sweep — the
+    drain path included — while deadline-free neighbors still solve."""
+    service, h = svc
+    now = [0.0]
+    d = SolverDaemon(service, max_batch_delay_ms=60_000.0,
+                     autostart=False, clock=lambda: now[0])
+    doomed = d.submit(SolveRequest(graph=h, b=_rhs(h.n, seed=200),
+                                   deadline_ms=50.0))
+    safe = d.submit(SolveRequest(graph=h, b=_rhs(h.n, seed=201)))
+    now[0] = 0.2                       # 200 ms later: 50 ms TTL long gone
+    d.close(drain=True)                # drain sweeps expiries first
+    with pytest.raises(DeadlineExceededError) as ei:
+        doomed.result(timeout=1.0)
+    err = ei.value
+    assert err.deadline_ms == 50.0
+    assert err.waited_ms >= 50.0
+    assert safe.result(timeout=1.0).converged
+    st = d.stats()["daemon"]
+    assert st["expired"] == 1
+
+
+def test_expiry_fires_from_live_flusher_before_batch_deadline(svc):
+    """The flusher's wait is min(batch deadline, earliest TTL): a 30 ms
+    TTL inside a 500 ms batch window expires in ~30 ms, not 500."""
+    service, h = svc
+    with SolverDaemon(service, max_batch_delay_ms=500.0) as d:
+        t = d.submit(SolveRequest(graph=h, b=_rhs(h.n, seed=210),
+                                  deadline_ms=30.0), tenant="default")
+        t0 = time.perf_counter()
+        with pytest.raises(DeadlineExceededError):
+            t.result(timeout=5.0)
+        elapsed = time.perf_counter() - t0
+        assert elapsed < 0.45          # did NOT wait out the batch window
+        st = d.stats()
+        assert st["daemon"]["expired"] == 1
+        assert st["tenants"]["default"]["expired"] == 1
+    m = service.stats()["metrics"]
+    assert m["serve.expired"] >= 1          # module-scoped service: >=
+    assert m["serve.tenant.default.expired"] >= 1
+
+
+def test_deadline_ms_validation_and_sync_path(svc):
+    service, h = svc
+    with pytest.raises(ValueError, match="deadline_ms"):
+        service.submit(SolveRequest(graph=h, b=_rhs(h.n, seed=220),
+                                    deadline_ms=-5.0))
+    # the sync service accepts but ignores queue TTLs (no background
+    # queue to age in): the solve just runs
+    t = service.submit(SolveRequest(graph=h, b=_rhs(h.n, seed=221),
+                                    deadline_ms=1e-3))
+    service.flush()
+    assert t.result().converged

@@ -1,0 +1,260 @@
+"""Spectral graph services: resistance, embeddings, harmonic interpolation.
+
+The contracts under test, each against an exact host f64 oracle:
+
+  * batched effective resistances match the dense-pinv quadratic form to
+    <= 1e-4 relative error, land in a SINGLE scheduler flush group per
+    (graph, config), and replay from the content-keyed result cache,
+  * the Fiedler pair matches ``numpy.linalg.eigh`` sign/scale-invariantly
+    with residual ||Lv - lambda v|| <= 1e-3, and k=3 embeddings recover
+    the bottom nontrivial eigenvalues,
+  * harmonic interpolation matches the dense Schur-complement solve,
+  * the ``er_exact`` score stage round-trips through ``PipelineConfig``
+    serialization and fingerprinting, and its resistances match pinv,
+  * the endpoints work identically routed through a ``SolverDaemon``,
+  * ``spectral.*`` spans and metrics surface in the telemetry plane.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import Graph, grid2d, mesh2d
+from repro.obs import get_metrics, get_tracer
+from repro.pipeline import Pipeline, PipelineConfig, pdgrass_config
+from repro.serve import SolverDaemon
+from repro.solver import SolverService
+from repro.spectral import (ResistanceCache, effective_resistance,
+                            exact_offtree_resistances, fiedler_vector,
+                            harmonic_interpolate, label_propagation,
+                            spectral_embedding)
+
+
+def _dense_lap(g: Graph) -> np.ndarray:
+    L = np.zeros((g.n, g.n))
+    for s, d, w in zip(g.src, g.dst, g.weight):
+        L[s, s] += w
+        L[d, d] += w
+        L[s, d] -= w
+        L[d, s] -= w
+    return L
+
+
+def _pinv_resistances(L: np.ndarray, pairs: np.ndarray) -> np.ndarray:
+    P = np.linalg.pinv(L)
+    u, v = pairs[:, 0], pairs[:, 1]
+    return P[u, u] + P[v, v] - 2 * P[u, v]
+
+
+def _pairs(n: int, q: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, 3 * q)
+    v = rng.integers(0, n, 3 * q)
+    keep = u != v
+    return np.stack([u[keep], v[keep]], axis=1)[:q]
+
+
+@pytest.fixture(scope="module")
+def svc():
+    service = SolverService(alpha=0.1)
+    g = mesh2d(8, 8, seed=0)
+    h = service.register(g)
+    return service, h, g
+
+
+# -- effective resistance ----------------------------------------------------
+
+
+def test_resistance_matches_dense_pinv(svc):
+    service, h, g = svc
+    pairs = _pairs(g.n, 24, seed=1)
+    r = effective_resistance(service, h, pairs, tol=1e-7)
+    r_exact = _pinv_resistances(_dense_lap(g), pairs)
+    rel = np.abs(r - r_exact) / r_exact
+    assert rel.max() <= 1e-4, f"max rel err {rel.max():.2e}"
+
+
+def test_batched_queries_use_one_flush_group_and_cache(svc):
+    service, h, g = svc
+    pairs = _pairs(g.n, 40, seed=2)
+    cache = ResistanceCache()
+    before = service.stats()["scheduler"]["groups"]
+    solved0 = service.metrics.snapshot().get(
+        "spectral.resistance.solved_columns", 0)
+    r = effective_resistance(service, h, pairs, tol=1e-6, chunk=8,
+                             cache=cache)
+    assert service.stats()["scheduler"]["groups"] - before == 1, (
+        "chunked submission must resolve into one (graph, config) group")
+    assert cache.misses == len(pairs)
+    # duplicate queries share a solve column: one column per UNIQUE pair
+    solved = service.metrics.snapshot()["spectral.resistance.solved_columns"]
+    assert solved - solved0 == len(np.unique(pairs.min(1) * g.n
+                                             + pairs.max(1)))
+    # full replay: zero new solves, bitwise-identical answers
+    r2 = effective_resistance(service, h, pairs, tol=1e-6, cache=cache)
+    assert np.array_equal(r, r2)
+    assert cache.hits >= len(pairs)
+    assert service.metrics.snapshot().get(
+        "spectral.resistance.solved_columns", 0) == solved
+    # R_eff is symmetric: swapped pairs hit the same entries
+    r3 = effective_resistance(service, h, pairs[:, ::-1], tol=1e-6,
+                              cache=cache)
+    assert np.array_equal(r, r3)
+
+
+def test_resistance_rejects_malformed_pairs(svc):
+    service, h, _ = svc
+    with pytest.raises(ValueError, match="pairs"):
+        effective_resistance(service, h, np.zeros((3, 4)))
+
+
+# -- spectral embeddings -----------------------------------------------------
+
+
+def test_fiedler_matches_eigh(svc):
+    service, h, g = svc
+    lam2, vec = fiedler_vector(service, h, tol=1e-4)
+    L = _dense_lap(g)
+    w, V = np.linalg.eigh(L)
+    assert abs(lam2 - w[1]) <= 1e-3 * abs(w[1])
+    # sign/scale-invariant vector comparison + the residual contract
+    align = abs(float(vec @ V[:, 1]))
+    assert align >= 1 - 1e-3, f"|cos| to eigh Fiedler vector {align:.6f}"
+    resid = np.linalg.norm(L @ vec - lam2 * vec) / np.linalg.norm(vec)
+    assert resid <= 1e-3
+    assert abs(vec.mean()) <= 1e-5          # deflated against all-ones
+
+
+def test_k3_embedding_recovers_bottom_eigenvalues(svc):
+    service, h, g = svc
+    emb = spectral_embedding(service, h, k=3, tol=1e-4)
+    w = np.linalg.eigvalsh(_dense_lap(g))
+    assert emb.converged
+    np.testing.assert_allclose(emb.values, w[1:4], rtol=1e-3)
+    # orthonormal, mean-zero columns
+    G = emb.vectors.T @ emb.vectors
+    np.testing.assert_allclose(G, np.eye(3), atol=1e-5)
+    np.testing.assert_allclose(emb.vectors.mean(axis=0), 0, atol=1e-5)
+
+
+# -- harmonic interpolation --------------------------------------------------
+
+
+def _dense_harmonic(L: np.ndarray, bmask: np.ndarray,
+                    xb: np.ndarray) -> np.ndarray:
+    I = ~bmask
+    x = np.zeros((L.shape[0],) + xb.shape[1:])
+    x[bmask] = xb
+    x[I] = np.linalg.solve(L[np.ix_(I, I)], -L[np.ix_(I, bmask)] @ xb)
+    return x
+
+
+def test_harmonic_matches_dense_schur(svc):
+    _, _, g = svc
+    rng = np.random.default_rng(3)
+    bmask = np.zeros(g.n, dtype=bool)
+    bmask[rng.choice(g.n, size=g.n // 5, replace=False)] = True
+    xb = rng.standard_normal((int(bmask.sum()), 2))
+    res = harmonic_interpolate(g, np.flatnonzero(bmask), xb, tol=1e-8)
+    assert res.converged.all()
+    x_exact = _dense_harmonic(_dense_lap(g), bmask, xb)
+    assert np.abs(res.x - x_exact).max() <= 1e-6
+    np.testing.assert_allclose(res.x[bmask], xb)  # boundary is clamped
+
+
+def test_label_propagation_one_hot_scores(svc):
+    _, _, g = svc
+    rng = np.random.default_rng(4)
+    labeled = rng.choice(g.n, size=g.n // 4, replace=False)
+    labels = rng.integers(0, 3, labeled.shape[0])
+    pred, scores = label_propagation(g, labeled, labels, tol=1e-6)
+    assert pred.shape == (g.n,) and scores.shape == (g.n, 3)
+    # harmonic average of one-hot boundary data: rows stay a distribution
+    np.testing.assert_allclose(scores.sum(axis=1), 1.0, atol=1e-4)
+    np.testing.assert_array_equal(pred[labeled], labels)
+
+
+# -- er_exact score stage ----------------------------------------------------
+
+
+def test_er_exact_config_roundtrip_and_fingerprint():
+    cfg = pdgrass_config(alpha=0.05, score_mode="er_exact")
+    d = cfg.to_dict()
+    assert d["score"]["kind"] == "er_exact"
+    back = PipelineConfig.from_dict(d)
+    assert back == cfg and back.fingerprint() == cfg.fingerprint()
+    # the solve tolerance is part of the artifact identity
+    tighter = dataclasses.replace(
+        cfg, score=dataclasses.replace(cfg.score, tol=1e-8))
+    assert tighter.fingerprint() != cfg.fingerprint()
+    assert (PipelineConfig.from_dict(tighter.to_dict()).fingerprint()
+            == tighter.fingerprint())
+
+
+def test_er_exact_pipeline_and_exact_resistances():
+    g = grid2d(7, 6, seed=5)
+    sp = Pipeline(pdgrass_config(alpha=0.1, score_mode="er_exact")).run(g)
+    assert sp.stats["n_recovered"] > 0
+    # the scores it ranked by: exact R_eff of the off-tree endpoints
+    in_tree = np.asarray(sp.tree_mask)
+    off = ~in_tree
+    u, v = g.src[off], g.dst[off]
+    r = exact_offtree_resistances(g, in_tree, u, v, tol=1e-8)
+    r_exact = _pinv_resistances(_dense_lap(g),
+                                np.stack([u, v], axis=1))
+    rel = np.abs(r - r_exact) / r_exact
+    assert rel.max() <= 1e-4, f"max rel err {rel.max():.2e}"
+
+
+def test_er_exact_without_graph_context_raises():
+    from repro.pipeline.stages import SCORE_STAGES
+    from repro.pipeline.config import ScoreConfig
+    import jax.numpy as jnp
+    with pytest.raises(ValueError, match="graph context"):
+        SCORE_STAGES["er_exact"](jnp.ones(3), jnp.ones(3),
+                                 ScoreConfig(kind="er_exact"))
+
+
+# -- daemon routing + telemetry ----------------------------------------------
+
+
+def test_daemon_routed_spectral_queries(svc):
+    service, h, g = svc
+    pairs = _pairs(g.n, 12, seed=6)
+    r_sync = effective_resistance(service, h, pairs, tol=1e-6,
+                                  cache=ResistanceCache())
+    with SolverDaemon(service, max_batch_delay_ms=10.0) as d:
+        r_async = effective_resistance(d, h, pairs, tol=1e-6,
+                                       cache=ResistanceCache(),
+                                       result_timeout=60.0)
+        lam2, _ = fiedler_vector(d, h, tol=1e-3, result_timeout=60.0)
+    np.testing.assert_allclose(r_async, r_sync, rtol=1e-5, atol=1e-9)
+    lam_sync, _ = fiedler_vector(service, h, tol=1e-3)
+    assert abs(lam2 - lam_sync) <= max(1e-6, 1e-3 * abs(lam_sync))
+
+
+def test_spectral_spans_and_metrics_surface(svc):
+    service, h, g = svc
+    tr = get_tracer()
+    was = tr.enabled
+    tr.enable()
+    tr.clear()
+    try:
+        effective_resistance(service, h, _pairs(g.n, 6, seed=7),
+                             cache=ResistanceCache())
+        fiedler_vector(service, h, tol=1e-3)
+        harmonic_interpolate(g, np.array([0, g.n - 1]),
+                             np.array([0.0, 1.0]))
+        names = set(tr.span_names())
+    finally:
+        tr.clear()
+        tr.enabled = was
+    assert {"spectral.resistance", "spectral.embedding",
+            "spectral.harmonic"} <= names
+    assert "solver.flush" in names          # the spans wrap real solves
+    m = service.stats()["metrics"]
+    assert m["spectral.resistance.queries"] >= 6
+    assert m["spectral.resistance.solved_columns"] >= 6
+    assert m["spectral.embedding.runs"] >= 1
+    gm = get_metrics().snapshot()
+    assert gm["spectral.harmonic.solves"] >= 1

@@ -129,3 +129,74 @@ def test_persist_failure_leaves_no_tmp(tmp_path, monkeypatch):
     with pytest.raises(OSError, match="disk full"):
         store.register(grid2d(4, 4, seed=5))
     assert [f for f in os.listdir(d) if f.endswith(".tmp")] == []
+
+
+# ---------------------------------------------------------------------------
+# Bounded persist tier: entries/bytes caps with mtime-LRU eviction
+# ---------------------------------------------------------------------------
+
+def _graphs(k, seed0=10):
+    return [grid2d(4 + i, 4, seed=seed0 + i) for i in range(k)]
+
+
+def test_gc_max_entries_evicts_oldest(tmp_path):
+    d = _store_dir(tmp_path)
+    store = GraphStore(persist_dir=d, max_entries=2)
+    handles = []
+    for i, g in enumerate(_graphs(5)):
+        os.utime(d, None)
+        handles.append(store.register(g))
+        # deterministic mtime ordering without sleeping
+        os.utime(os.path.join(d, f"{handles[-1].fingerprint}.npz"),
+                 (i, i))
+    store.register(grid2d(12, 4, seed=99))          # triggers final prune
+    files = {f for f in os.listdir(d) if f.endswith(".npz")}
+    assert len(files) == 2
+    # newest mtimes survive; the file just written is among them
+    st = store.stats
+    assert st["persist_entries"] == 2
+    assert st["persist_evictions"] == 4             # 6 persisted, 2 kept
+    assert st["max_entries"] == 2 and st["max_bytes"] is None
+    # live handles are untouched by disk eviction
+    for h in handles:
+        assert store.get(h.fingerprint) is h
+
+
+def test_gc_max_bytes_and_oversized_single_graph(tmp_path):
+    d = _store_dir(tmp_path)
+    store = GraphStore(persist_dir=d, max_bytes=1)   # everything is over
+    h = store.register(grid2d(6, 6, seed=20))
+    # the just-written file is never the victim: it stays despite the cap
+    assert os.path.exists(os.path.join(d, f"{h.fingerprint}.npz"))
+    assert store.stats["persist_evictions"] == 0
+    # the next register evicts the old one but keeps the new one
+    h2 = store.register(grid2d(7, 7, seed=21))
+    files = {f for f in os.listdir(d) if f.endswith(".npz")}
+    assert files == {f"{h2.fingerprint}.npz"}
+    assert store.stats["persist_evictions"] == 1
+
+
+def test_gc_reregister_refreshes_recency(tmp_path):
+    d = _store_dir(tmp_path)
+    store = GraphStore(persist_dir=d, max_entries=2)
+    g_old, g_mid = grid2d(5, 5, seed=30), grid2d(6, 5, seed=31)
+    h_old = store.register(g_old)
+    h_mid = store.register(g_mid)
+    os.utime(os.path.join(d, f"{h_old.fingerprint}.npz"), (1, 1))
+    os.utime(os.path.join(d, f"{h_mid.fingerprint}.npz"), (2, 2))
+    store.register(g_old)                            # touch -> now newest
+    h_new = store.register(grid2d(7, 5, seed=32))    # prune runs
+    files = {f for f in os.listdir(d) if f.endswith(".npz")}
+    assert files == {f"{h_old.fingerprint}.npz", f"{h_new.fingerprint}.npz"}
+
+
+def test_gc_service_caps_and_store_conflict(tmp_path):
+    disk = str(tmp_path / "cache")
+    svc = SolverService(alpha=0.1, disk_dir=disk, store_max_entries=1)
+    svc.register(grid2d(4, 4, seed=40))
+    svc.register(grid2d(5, 4, seed=41))
+    st = svc.stats()["store"]
+    assert st["persist_entries"] == 1
+    assert st["persist_evictions"] == 1
+    with pytest.raises(ValueError, match="set the caps on it"):
+        SolverService(alpha=0.1, store=GraphStore(), store_max_entries=3)
