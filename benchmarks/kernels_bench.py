@@ -4,6 +4,13 @@ On this CPU container the Pallas kernels execute in interpret mode, so
 the numbers measure correctness-path overhead, not TPU performance; the
 jnp reference path is what the CPU actually runs in production here.
 Shapes sweep the regimes the recovery engine uses.
+
+The ``vcycle_*`` rows time a full preconditioner application through the
+fused kernel suite vs the unfused composition (checked allclose on the
+way), and the run asserts the fused HBM-byte model below the unfused one
+— the same acceptance gate ``roofline_table`` carries, here on the
+microbench path.  ``--json`` writes a bench-v1 artifact with the rows
+plus the byte models.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timeit
+from benchmarks.common import timeit, write_bench_json
 from repro.kernels import ops
 
 
@@ -49,15 +56,81 @@ def run(quick: bool = False):
         t_ref, _ = timeit(lambda: np.asarray(ops.spmv_ref(idx, val, x)),
                           repeat=3)
         rows.append((f"spmv_ref_n{n}", t_ref * 1e6, f"nnz={n*L}"))
+        xb = jnp.asarray(rng.standard_normal((n, 4)).astype(np.float32))
+        t_b, _ = timeit(lambda: np.asarray(ops.spmv_batched(
+            idx, val, xb)), repeat=1)
+        rows.append((f"spmv_batched_interp_n{n}_k4", t_b * 1e6,
+                     "interpret=True"))
     return rows
+
+
+def run_vcycle(quick: bool = False):
+    """Fused vs unfused V-cycle application on a mesh2d hierarchy:
+    timing rows + an allclose parity check + the byte-model assert."""
+    from repro.core import mesh2d
+    from repro.launch.roofline import (hierarchy_level_shapes,
+                                       hierarchy_level_triples,
+                                       vcycle_bytes, vcycle_bytes_fused)
+    from repro.pipeline import pdgrass_config
+    from repro.solver.device_pcg import make_vcycle
+    from repro.solver.hierarchy import build_hierarchy
+
+    side, k = (16, 4) if quick else (40, 8)
+    g = mesh2d(side, side, seed=0)
+    hier = build_hierarchy(g, config=pdgrass_config(alpha=0.05, chunk=512))
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.standard_normal((g.n, k)).astype(np.float32))
+    r = r - jnp.mean(r, axis=0, keepdims=True)
+
+    degree = 2
+    vc_ref = jax.jit(make_vcycle(hier, degree=degree, matvec_impl="ref"))
+    vc_fused = jax.jit(make_vcycle(hier, degree=degree,
+                                   matvec_impl="fused"))
+    z_ref = np.asarray(vc_ref(r))
+    z_fused = np.asarray(vc_fused(r))
+    assert np.allclose(z_ref, z_fused, atol=1e-5), (
+        "fused V-cycle diverged from the unfused composition")
+
+    rows = []
+    t_ref, _ = timeit(lambda: np.asarray(vc_ref(r)), repeat=3)
+    rows.append((f"vcycle_unfused_n{g.n}_k{k}", t_ref * 1e6,
+                 f"degree={degree}"))
+    t_fused, _ = timeit(lambda: np.asarray(vc_fused(r)), repeat=3)
+    rows.append((f"vcycle_fused_interp_n{g.n}_k{k}", t_fused * 1e6,
+                 f"degree={degree}"))
+
+    vc_b = vcycle_bytes(hierarchy_level_shapes(hier), k,
+                        cheby_degree=degree)
+    vc_fused_b = vcycle_bytes_fused(hierarchy_level_triples(hier), k,
+                                    cheby_degree=degree)
+    assert vc_fused_b < vc_b, (
+        f"fused V-cycle byte model ({vc_fused_b}) not below unfused "
+        f"({vc_b})")
+    rows.append((f"vcycle_bytes_model_n{g.n}_k{k}", 0.0,
+                 f"unfused={vc_b};fused={vc_fused_b};"
+                 f"ratio={vc_b / vc_fused_b:.2f}x"))
+    models = {"n": g.n, "k": k, "degree": degree,
+              "vcycle_bytes": vc_b, "vcycle_bytes_fused": vc_fused_b}
+    return rows, models
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write bench-v1 JSON (rows + V-cycle byte models)")
     args = ap.parse_args(argv)
-    for name, us, derived in run(quick=args.quick):
+    rows = run(quick=args.quick)
+    vc_rows, models = run_vcycle(quick=args.quick)
+    rows += vc_rows
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        write_bench_json(
+            args.json, "kernels_bench",
+            [{"name": n, "us_per_call": us, "derived": d}
+             for n, us, d in rows],
+            extra={"vcycle_model": models})
 
 
 if __name__ == "__main__":

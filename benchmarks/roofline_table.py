@@ -75,7 +75,9 @@ def solver_table(quick: bool = True):
     from repro.core import mesh2d
     from repro.launch.roofline import (HBM_BW, achieved_bandwidth,
                                        ell_spmv_bytes, ell_spmv_flops,
-                                       hierarchy_level_shapes, vcycle_bytes)
+                                       hierarchy_level_shapes,
+                                       hierarchy_level_triples, vcycle_bytes,
+                                       vcycle_bytes_fused)
     from repro.obs import get_tracer
     from repro.solver import SolverService
 
@@ -101,39 +103,59 @@ def solver_table(quick: bool = True):
     _, (idx, val, hier), _ = svc.artifacts(handle)
     l_top = int(idx.shape[1])
     shapes = hierarchy_level_shapes(hier)
+    triples = hierarchy_level_triples(hier)
     iters = int(np.asarray(warm.iters).max())
 
+    degree = 2                              # make_vcycle's default smoother
     spmv_b = ell_spmv_bytes(g.n, l_top, k)
     spmv_f = ell_spmv_flops(g.n, l_top, k)
-    vc_b = vcycle_bytes(shapes, k)
+    vc_b = vcycle_bytes(shapes, k, cheby_degree=degree)
+    vc_fused_b = vcycle_bytes_fused(triples, k, cheby_degree=degree)
+    # acceptance gate: the fused V-cycle must model strictly fewer HBM
+    # bytes than the unfused composition on every hierarchy this builds
+    assert vc_fused_b < vc_b, (
+        f"fused V-cycle byte model ({vc_fused_b}) not below unfused "
+        f"({vc_b}) — fusion model regressed")
     vec_b = 10 * g.n * k * 4
     iter_b = spmv_b + vc_b + vec_b
+    iter_fused_b = spmv_b + vc_fused_b + vec_b
     total_b = iter_b * max(iters, 1)
     ach = achieved_bandwidth(total_b, solve_ms[0] / 1e3)
+    ach_fused = achieved_bandwidth(iter_fused_b * max(iters, 1),
+                                   solve_ms[0] / 1e3)
 
     gib = 1024.0 ** 3
     lines = [
         f"solver hot loop: mesh2d-{side}x{side} |V|={g.n} ELL width "
         f"L={l_top} k={k}  hierarchy levels={[s[0] for s in shapes]}",
         "",
-        "| component      | bytes/iter (model) | flops/iter (model) |",
+        "| component        | bytes/iter (model) | flops/iter (model) |",
         "|---|---|---|",
-        f"| ell_spmv (top) | {spmv_b:>12,} | {spmv_f:>12,} |",
-        f"| vcycle         | {vc_b:>12,} | — |",
-        f"| vector ops     | {vec_b:>12,} | — |",
-        f"| **total/iter** | {iter_b:>12,} | — |",
+        f"| ell_spmv (top)   | {spmv_b:>12,} | {spmv_f:>12,} |",
+        f"| vcycle (unfused) | {vc_b:>12,} | — |",
+        f"| vcycle (fused)   | {vc_fused_b:>12,} | — |",
+        f"| vector ops       | {vec_b:>12,} | — |",
+        f"| **total/iter**   | {iter_b:>12,} | — |",
         "",
+        f"fused V-cycle models {vc_b / vc_fused_b:.2f}x fewer HBM bytes "
+        f"than unfused (degree={degree})",
         f"measured: solver.solve span = {solve_ms[0]:.2f} ms, "
         f"iters = {iters}",
-        f"achieved = {ach['bytes_per_s'] / gib:.2f} GiB/s "
+        f"achieved (unfused model) = {ach['bytes_per_s'] / gib:.2f} GiB/s "
         f"({100 * ach['frac_of_hbm']:.2f}% of the {HBM_BW / 1e9:.0f} GB/s "
         f"HBM roof)",
+        f"achieved (fused model)   = "
+        f"{ach_fused['bytes_per_s'] / gib:.2f} GiB/s "
+        f"({100 * ach_fused['frac_of_hbm']:.2f}% of the HBM roof)",
     ]
     print("\n".join(lines))
     return {"n": g.n, "k": k, "ell_width": l_top, "iters": iters,
-            "bytes_per_iter": iter_b, "solve_ms": solve_ms[0],
+            "bytes_per_iter": iter_b, "bytes_per_iter_fused": iter_fused_b,
+            "vcycle_bytes": vc_b, "vcycle_bytes_fused": vc_fused_b,
+            "solve_ms": solve_ms[0],
             "achieved_bytes_per_s": ach["bytes_per_s"],
-            "frac_of_hbm": ach["frac_of_hbm"]}
+            "frac_of_hbm": ach["frac_of_hbm"],
+            "frac_of_hbm_fused": ach_fused["frac_of_hbm"]}
 
 
 def main(argv=None):

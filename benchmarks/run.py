@@ -66,18 +66,23 @@ def main(argv=None) -> None:
         ("spectral_bench", spectral_bench.main),
     ]
     section_argv = ["--quick"] if args.smoke else []
-    solver_json = None
+    solver_json = kernels_json = None
     if args.json:
-        # solver_bench writes its own detail record; embed it in ours
+        # solver_bench / kernels_bench write their own detail records;
+        # embed them in ours
         solver_json = args.json + ".solver_bench.tmp"
+        kernels_json = args.json + ".kernels_bench.tmp"
     section_runtimes = {}
     for name, fn in sections:
         if name in args.skip:
             print(f"\n=== {name} === (skipped)")
             continue
         print(f"\n=== {name} ===")
-        extra_argv = (["--json", solver_json]
-                      if solver_json and name == "solver_bench" else [])
+        extra_argv = []
+        if solver_json and name == "solver_bench":
+            extra_argv = ["--json", solver_json]
+        elif kernels_json and name == "kernels_bench":
+            extra_argv = ["--json", kernels_json]
         t0 = time.perf_counter()
         fn(section_argv + extra_argv)
         dt = time.perf_counter() - t0
@@ -86,15 +91,20 @@ def main(argv=None) -> None:
 
     if args.json:
         import json as json_mod
-        detail = None
-        if solver_json and os.path.exists(solver_json):
-            with open(solver_json) as f:
-                detail = json_mod.load(f)
-            os.remove(solver_json)
+
+        def _take(tmp_path):
+            if tmp_path and os.path.exists(tmp_path):
+                with open(tmp_path) as f:
+                    detail = json_mod.load(f)
+                os.remove(tmp_path)
+                return detail
+            return None
+
         write_bench_json(
             args.json, "run",
             {"section_runtimes_s": section_runtimes,
-             "skipped": args.skip, "solver_bench": detail},
+             "skipped": args.skip, "solver_bench": _take(solver_json),
+             "kernels_bench": _take(kernels_json)},
             extra={"smoke": args.smoke})
     if args.trace:
         from repro.obs import get_tracer

@@ -1,26 +1,26 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only; on a
-real TPU deployment set ``REPRO_KERNEL_INTERPRET=0`` (or pass
-``interpret=False``) and the same pallas_call lowers through Mosaic.
+``interpret=None`` (the default everywhere) resolves automatically via
+:func:`resolve_interpret`: an explicit bool wins, else the
+``REPRO_KERNEL_INTERPRET`` environment variable (``"0"`` = compiled), else
+the kernels compile through Mosaic only when ``jax.default_backend()`` is
+TPU and interpret everywhere else (CPU containers, CI).
 """
 from __future__ import annotations
-
-import os
 
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.similarity import similarity_mark as _similarity_mark
 from repro.kernels.spmv_ell import spmv_ell as _spmv_ell, to_ell  # noqa: F401
-
-_INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+from repro.kernels.vcycle_fused import (  # noqa: F401
+    make_fused_chebyshev, make_fused_restrict_residual, resolve_interpret,
+    spmv_ell_batched as _spmv_ell_batched)
 
 
 def similarity_mark(csu, csv, cbeta, cseg, esu, esv, eseg,
                     tile_m: int = 512, interpret: bool | None = None):
-    if interpret is None:
-        interpret = _INTERPRET
+    interpret = resolve_interpret(interpret)
     m = esu.shape[0]
     if m % tile_m != 0:  # pad to tile multiple with inert rows
         pad = tile_m - m % tile_m
@@ -33,16 +33,17 @@ def similarity_mark(csu, csv, cbeta, cseg, esu, esv, eseg,
 
 
 def spmv(idx, val, x, tile_n: int = 256, interpret: bool | None = None):
-    if interpret is None:
-        interpret = _INTERPRET
-    n = idx.shape[0]
-    if n % tile_n != 0:
-        pad = tile_n - n % tile_n
-        idx = jnp.pad(idx, ((0, pad), (0, 0)))
-        val = jnp.pad(val, ((0, pad), (0, 0)))
-        out = _spmv_ell(idx, val, x, tile_n=tile_n, interpret=interpret)
-        return out[:n]
-    return _spmv_ell(idx, val, x, tile_n=tile_n, interpret=interpret)
+    """Single-column ELL spmv; non-tile-multiple row counts pad inside
+    the kernel wrapper."""
+    return _spmv_ell(idx, val, x, tile_n=tile_n,
+                     interpret=resolve_interpret(interpret))
+
+
+def spmv_batched(idx, val, x, tile_n: int = 256,
+                 interpret: bool | None = None):
+    """Batched-RHS ELL spmv: the whole ``[n, k]`` block in one kernel."""
+    return _spmv_ell_batched(idx, val, x, tile_n=tile_n,
+                             interpret=resolve_interpret(interpret))
 
 
 similarity_mark_ref = _ref.similarity_mark_ref

@@ -33,23 +33,30 @@ def _spmv_kernel(idx_ref, val_ref, x_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def spmv_ell(idx, val, x, *, tile_n: int = 256, interpret: bool = True):
-    """y[i] = sum_l val[i, l] * x[idx[i, l]].  Rows padded with val = 0."""
+    """y[i] = sum_l val[i, l] * x[idx[i, l]].  Rows padded with val = 0.
+
+    Row counts that are not a multiple of ``tile_n`` are padded up to the
+    tile boundary with zero-valued ELL entries (which gather ``x[0]`` and
+    contribute nothing) and sliced back — arbitrary graph sizes never
+    crash the kernel."""
     n, L = idx.shape
-    assert n % tile_n == 0, (n, tile_n)
-    grid = (n // tile_n,)
-    return pl.pallas_call(
+    pad = (-n) % tile_n
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        val = jnp.pad(val, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
         _spmv_kernel,
-        grid=grid,
+        grid=((n + pad) // tile_n,),
         in_specs=[
             pl.BlockSpec((tile_n, L), lambda i: (i, 0)),
             pl.BlockSpec((tile_n, L), lambda i: (i, 0)),
             pl.BlockSpec(x.shape, lambda i: (0,)),   # x resident in VMEM
         ],
         out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((x.shape[0],), val.dtype)
-        if x.shape[0] == n else jax.ShapeDtypeStruct((n,), val.dtype),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), val.dtype),
         interpret=interpret,
     )(idx, val, x)
+    return out[:n] if pad else out
 
 
 def to_ell(graph, dtype=jnp.float32):

@@ -160,6 +160,73 @@ def hierarchy_level_shapes(hierarchy) -> list:
             for lev in hierarchy.levels]
 
 
+def fused_smoother_bytes(n: int, ell_width: int, k: int,
+                         cheby_degree: int = 3, with_guess: bool = False,
+                         dtype_bytes: int = 4, idx_bytes: int = 4) -> int:
+    """HBM traffic of ONE fused Chebyshev sweep
+    (:func:`repro.kernels.vcycle_fused.make_fused_chebyshev`).
+
+    The whole degree-``cheby_degree`` polynomial runs inside a single
+    kernel with the slabs, diagonal and vectors VMEM resident: idx/val
+    cross HBM once per sweep — the traffic is *degree independent*, which
+    is exactly the fusion win over ``cheby_degree`` separate spmv streams.
+    Reads: slab + diag + r (+ the initial iterate on post-smooth sweeps);
+    writes: the smoothed z."""
+    del cheby_degree  # documents the degree independence
+    slab = n * ell_width * (idx_bytes + dtype_bytes)
+    vecs = (2 + (1 if with_guess else 0)) * n * k * dtype_bytes  # r, z_out(, z_in)
+    diag = n * dtype_bytes
+    return slab + vecs + diag
+
+
+def fused_restrict_residual_bytes(n: int, ell_width: int, k: int,
+                                  n_coarse: int, dtype_bytes: int = 4,
+                                  idx_bytes: int = 4) -> int:
+    """HBM traffic of one fused restrict+residual pass
+    (:func:`repro.kernels.vcycle_fused.make_fused_restrict_residual`):
+    ``rc = segment_sum(r - L z, agg)`` in one kernel.  Reads slab + agg +
+    r + z; writes only the ``[n_coarse, k]`` coarse residual — the fine
+    residual never round-trips through HBM."""
+    slab = n * ell_width * (idx_bytes + dtype_bytes)
+    vecs = 2 * n * k * dtype_bytes              # r, z
+    agg = n * idx_bytes
+    out = n_coarse * k * dtype_bytes
+    return slab + vecs + agg + out
+
+
+def vcycle_bytes_fused(level_triples, k: int, cheby_degree: int = 3,
+                       dtype_bytes: int = 4) -> int:
+    """HBM traffic of one *fused* V-cycle over
+    ``level_triples = [(n, ell_width, n_coarse)]``.
+
+    Per fine level: one fused pre-smooth sweep, one fused
+    restrict+residual pass, the prolongation gather-add (read coarse z +
+    fine z, write fine z), and one fused post-smooth sweep (which also
+    reads the prolonged iterate).  The slabs cross HBM three times per
+    level per cycle instead of ``2*cheby_degree + 1`` — compare
+    :func:`vcycle_bytes` with identical ``level_shapes``/``k`` for the
+    modeled saving."""
+    total = 0
+    for n, width, nc in level_triples:
+        total += fused_smoother_bytes(n, width, k, cheby_degree,
+                                      with_guess=False,
+                                      dtype_bytes=dtype_bytes)
+        total += fused_restrict_residual_bytes(n, width, k, nc,
+                                               dtype_bytes=dtype_bytes)
+        total += (nc * k + 2 * n * k) * dtype_bytes    # prolong gather-add
+        total += fused_smoother_bytes(n, width, k, cheby_degree,
+                                      with_guess=True,
+                                      dtype_bytes=dtype_bytes)
+    return total
+
+
+def hierarchy_level_triples(hierarchy) -> list:
+    """[(n, ell_width, n_coarse)] of each fine level — feed to
+    :func:`vcycle_bytes_fused`."""
+    return [(int(lev.n), int(lev.idx.shape[1]), int(lev.n_coarse))
+            for lev in hierarchy.levels]
+
+
 def achieved_bandwidth(bytes_moved: float, seconds: float) -> dict:
     """Achieved bytes/s for a measured span + fraction of the HBM roof."""
     if seconds <= 0:

@@ -28,13 +28,16 @@ requires.
 """
 from __future__ import annotations
 
-import os
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.vcycle_fused import (cheby_coeffs, cheby_recurrence,
+                                        make_fused_chebyshev,
+                                        make_fused_restrict_residual,
+                                        resolve_interpret)
 from repro.obs.device import named_scope
 from repro.solver.hierarchy import Hierarchy
 
@@ -47,10 +50,11 @@ class BatchedPCGResult(NamedTuple):
 
 
 def default_matvec_impl() -> str:
-    """Kernel path on real accelerators; jnp reference under interpret mode
-    (the interpreted Pallas kernel is correct but slow on CPU containers)."""
-    return "kernel" if os.environ.get("REPRO_KERNEL_INTERPRET", "1") == "0" \
-        else "ref"
+    """Fused Pallas kernel path on real accelerators; jnp reference under
+    interpret mode (the interpreted kernels are correct but slow on CPU
+    containers).  The split follows :func:`resolve_interpret` — explicit
+    ``REPRO_KERNEL_INTERPRET`` wins, else ``jax.default_backend()``."""
+    return "ref" if resolve_interpret(None) else "fused"
 
 
 def ell_laplacian(graph):
@@ -59,16 +63,24 @@ def ell_laplacian(graph):
     return ops.to_ell(graph)
 
 
-def make_matvec(idx, val, impl: str = "ref", tile_n: int = 256) -> Callable:
+def make_matvec(idx, val, impl: str = "ref", tile_n: int = 256,
+                interpret: Optional[bool] = None) -> Callable:
     """Batched ELL matvec ``[n, k] -> [n, k]``.
 
+    ``impl="fused"`` routes the whole ``[n, k]`` block through the
+    batched-RHS Pallas kernel (one dispatch, x VMEM resident);
     ``impl="kernel"`` unrolls the (static, small) column dimension through
-    the Pallas ELL kernel; ``impl="ref"`` is the one-gather jnp path.  Both
-    compute y[i, j] = sum_l val[i, l] * x[idx[i, l], j].
+    the single-column Pallas kernel; ``impl="ref"`` is the one-gather jnp
+    path.  All compute y[i, j] = sum_l val[i, l] * x[idx[i, l], j].
     """
-    if impl == "kernel":
+    if impl == "fused":
         def matvec(x):
-            cols = [ops.spmv(idx, val, x[:, j], tile_n=tile_n)
+            return ops.spmv_batched(idx, val, x, tile_n=tile_n,
+                                    interpret=interpret)
+    elif impl == "kernel":
+        def matvec(x):
+            cols = [ops.spmv(idx, val, x[:, j], tile_n=tile_n,
+                             interpret=interpret)
                     for j in range(x.shape[1])]
             return jnp.stack(cols, axis=1)
     elif impl == "ref":
@@ -121,32 +133,24 @@ def make_chebyshev_smoother(matvec: Callable, diag, rho: float,
     guess ``z`` (``None`` = zero).  The correction is a fixed polynomial in
     ``D^-1 L`` applied to ``D^-1 (r - L z)``, i.e. a symmetric operator —
     using the same polynomial pre and post keeps the V-cycle SPD.
+
+    The polynomial itself (:func:`repro.kernels.vcycle_fused.cheby_recurrence`)
+    is shared with the fused Pallas kernel, so the unfused composition and
+    the fused kernel are the same computation by construction.
     """
-    lmax = 1.1 * rho
-    lmin = lmax / 4.0
-    theta = 0.5 * (lmax + lmin)
-    delta = 0.5 * (lmax - lmin)
-    sigma = theta / delta
+    theta, delta, sigma = cheby_coeffs(rho)
     inv_d = (1.0 / diag)[:, None]
 
     def smooth(r, z=None):
-        res = r if z is None else r - matvec(z)
-        p = inv_d * res / theta
-        z = p if z is None else z + p
-        rho_prev = 1.0 / sigma
-        for _ in range(degree - 1):
-            res = r - matvec(z)
-            rho_k = 1.0 / (2.0 * sigma - rho_prev)
-            p = (rho_k * rho_prev) * p + (2.0 * rho_k / delta) * (inv_d * res)
-            z = z + p
-            rho_prev = rho_k
-        return z
+        return cheby_recurrence(matvec, inv_d, r, z, degree=degree,
+                                theta=theta, delta=delta, sigma=sigma)
 
     return smooth
 
 
 def make_vcycle(hier: Hierarchy, *, degree: int = 2,
-                matvec_impl: str = "ref", tile_n: int = 256) -> Callable:
+                matvec_impl: str = "ref", tile_n: int = 256,
+                interpret: Optional[bool] = None) -> Callable:
     """Symmetric V(1,1)-cycle apply ``r [n, k] -> z ~= L_P^+ r``.
 
     Forward sweep (fine -> coarse): Chebyshev pre-smooth from zero,
@@ -156,15 +160,37 @@ def make_vcycle(hier: Hierarchy, *, degree: int = 2,
     post-smooth.  The level structure is static, so the recursion unrolls
     under jit.  ``degree`` is the Chebyshev polynomial degree (2 or 3 are
     the sweet spot); each level's spectral radius bound comes from
-    :func:`estimate_dinv_rho` at build time.
+    :func:`estimate_dinv_rho` at build time — always over the jnp
+    reference matvec, so every ``matvec_impl`` bakes in the *identical*
+    polynomial coefficients (the fused-vs-unfused iteration-count parity
+    contract rests on this).
+
+    ``matvec_impl="fused"`` swaps each level's smoother for the fused
+    Pallas Chebyshev kernel (one read of the idx/val slabs per sweep
+    instead of per matvec) and the down-sweep residual + restriction for
+    the fused restrict+residual kernel — the V-cycle's HBM traffic drops
+    from ``(2*degree + 1)`` slab streams per level to 3.
     """
-    matvecs = [make_matvec(lev.idx, lev.val, matvec_impl, tile_n)
-               for lev in hier.levels]
-    smoothers = [
-        make_chebyshev_smoother(mv, lev.diag,
-                                estimate_dinv_rho(mv, lev.diag),
-                                degree=degree)
-        for mv, lev in zip(matvecs, hier.levels)]
+    fused = matvec_impl == "fused"
+    rhos = [estimate_dinv_rho(make_matvec(lev.idx, lev.val, "ref"), lev.diag)
+            for lev in hier.levels]
+    if fused:
+        matvecs = [make_matvec(lev.idx, lev.val, "fused", tile_n,
+                               interpret=interpret) for lev in hier.levels]
+        smoothers = [
+            make_fused_chebyshev(lev.idx, lev.val, lev.diag, rho,
+                                 degree=degree, interpret=interpret)
+            for lev, rho in zip(hier.levels, rhos)]
+        restricts = [
+            make_fused_restrict_residual(lev.idx, lev.val, lev.agg,
+                                         lev.n_coarse, interpret=interpret)
+            for lev in hier.levels]
+    else:
+        matvecs = [make_matvec(lev.idx, lev.val, matvec_impl, tile_n,
+                               interpret=interpret) for lev in hier.levels]
+        smoothers = [
+            make_chebyshev_smoother(mv, lev.diag, rho, degree=degree)
+            for mv, lev, rho in zip(matvecs, hier.levels, rhos)]
 
     def coarse_solve(r):
         with named_scope("vcycle.coarse"):
@@ -184,8 +210,11 @@ def make_vcycle(hier: Hierarchy, *, degree: int = 2,
         mv, smooth = matvecs[l], smoothers[l]
         with named_scope(f"vcycle.L{l}.down"):
             z = smooth(r)                                   # pre-smooth
-            rc = jax.ops.segment_sum(r - mv(z), lev.agg,    # restrict
-                                     num_segments=lev.n_coarse)
+            if fused:                                       # restrict
+                rc = restricts[l](r, z)
+            else:
+                rc = jax.ops.segment_sum(r - mv(z), lev.agg,
+                                         num_segments=lev.n_coarse)
         zc = cycle(l + 1, rc)                               # coarse correct
         with named_scope(f"vcycle.L{l}.up"):
             z = z + zc[lev.agg]                             # prolong
@@ -292,18 +321,28 @@ def batched_pcg(matvec: Callable, b, msolve: Optional[Callable] = None,
 def make_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
                 precond: str = "hierarchy", matvec_impl: Optional[str] = None,
                 tile_n: int = 256, mesh=None,
-                shard_axis: str = "data") -> Callable:
+                shard_axis: str = "data",
+                interpret: Optional[bool] = None) -> Callable:
     """Build the jit'd end-to-end solve ``(b [n, k], tol, maxiter) -> result``.
 
     ``precond``: "hierarchy" (V-cycle over ``hierarchy``), "jacobi", or
     "none".  The returned function is a plain ``jax.jit`` closure — callers
     (the service) cache it per graph so repeated solves pay zero setup.
 
+    ``matvec_impl``: "fused" (batched-RHS Pallas spmv + fused Chebyshev /
+    restrict+residual kernels), "kernel" (per-column Pallas spmv), "ref"
+    (jnp composition, the parity oracle), or ``None`` to auto-select via
+    :func:`default_matvec_impl`.  ``interpret`` forces Pallas interpret
+    (``True``) or compiled Mosaic (``False``) mode; ``None`` resolves from
+    the backend (see :func:`repro.kernels.ops.resolve_interpret`).
+
     ``mesh`` switches to the mesh-sharded plane: the ELL slabs (top level
     and every hierarchy level) are row-sharded over ``shard_axis`` and the
     whole PCG + V-cycle runs under ``shard_map`` — see
-    :mod:`repro.solver.sharded`.  The returned closure keeps this exact
-    signature and global-array contract either way.
+    :mod:`repro.solver.sharded`.  ``matvec_impl="fused"`` there contracts
+    each shard's slab with the batched Pallas kernel.  The returned
+    closure keeps this exact signature and global-array contract either
+    way.
     """
     if mesh is not None:
         if matvec_impl == "kernel":
@@ -311,21 +350,24 @@ def make_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
             warnings.warn(
                 "matvec_impl='kernel' is ignored on the sharded path: each "
                 "shard's ELL slab is contracted with the jnp reference "
-                "matvec under shard_map (the Pallas kernel is a "
-                "single-device code path)", stacklevel=2)
+                "matvec under shard_map (use matvec_impl='fused' for the "
+                "batched per-shard Pallas contraction)", stacklevel=2)
+            matvec_impl = "ref"
         # local import: sharded builds on this module's smoother/estimator
         from repro.solver.sharded import make_sharded_solver
         return make_sharded_solver(idx, val, hierarchy=hierarchy,
                                    precond=precond, mesh=mesh,
-                                   shard_axis=shard_axis)
+                                   shard_axis=shard_axis,
+                                   matvec_impl=matvec_impl,
+                                   tile_n=tile_n, interpret=interpret)
     if matvec_impl is None:
         matvec_impl = default_matvec_impl()
-    matvec = make_matvec(idx, val, matvec_impl, tile_n)
+    matvec = make_matvec(idx, val, matvec_impl, tile_n, interpret=interpret)
     if precond == "hierarchy":
         if hierarchy is None:
             raise ValueError("precond='hierarchy' needs a Hierarchy")
         msolve = make_vcycle(hierarchy, matvec_impl=matvec_impl,
-                             tile_n=tile_n)
+                             tile_n=tile_n, interpret=interpret)
     elif precond == "jacobi":
         n = idx.shape[0]
         diag = jnp.sum(val * (idx == jnp.arange(n)[:, None]), axis=1)

@@ -62,7 +62,13 @@ from repro.solver.requests import (AdmissionError, GraphHandle, GraphStore,
 #     count; None when single-device) joins the key extras, and
 #     contraction="sharded" is a distinct mode.  v5 on-disk entries miss
 #     cleanly and rebuild.
-_SCHEMA = "solver-v6"
+# v7: Pallas-fused V-cycle — ``matvec_impl`` ("fused" / "kernel" / "ref")
+#     joins the key extras so fused- and unfused-built artifacts never
+#     alias even though the hierarchy arrays are identical today (the key
+#     must cover everything that shaped the cached value, and future fused
+#     builds may bake kernel-specific layouts).  v6 on-disk entries miss
+#     cleanly and rebuild.
+_SCHEMA = "solver-v7"
 
 
 def _next_pow2(k: int) -> int:
@@ -90,7 +96,8 @@ class SolverService:
                  contraction: Optional[str] = None,
                  max_pending_columns: Optional[int] = None,
                  mesh=None, shard_axis: str = "data",
-                 metrics: Optional[Metrics] = None):
+                 metrics: Optional[Metrics] = None,
+                 interpret: Optional[bool] = None):
         """``pipeline`` selects the default sparsification pipeline backing
         the preconditioner (any family member — pdGRASS, feGRASS, custom
         stage mixes); individual requests may override it with
@@ -118,7 +125,18 @@ class SolverService:
         V-cycle run row-sharded under ``shard_map`` over ``shard_axis``
         (see :mod:`repro.solver.sharded`).  The mesh descriptor joins the
         artifact cache key (schema v6), so single-device and sharded
-        artifacts never alias."""
+        artifacts never alias.
+
+        ``matvec_impl`` selects the solve plane's kernel path — ``"fused"``
+        (Pallas-fused V-cycle: batched spmv + fused Chebyshev + fused
+        restrict+residual), ``"kernel"`` (per-column Pallas spmv), or
+        ``"ref"`` (jnp composition, the parity oracle); ``None``
+        auto-selects via :func:`~repro.solver.device_pcg.default_matvec_impl`
+        ("fused" when the kernels compile, "ref" under interpret).  The
+        impl joins the artifact key (schema v7).  ``interpret`` forces
+        Pallas interpret/compiled mode for all kernels this service builds;
+        ``None`` resolves from the backend (see
+        :func:`repro.kernels.ops.resolve_interpret`)."""
         if pipeline is not None and alpha is not None:
             raise ValueError(
                 "pass either alpha or pipeline, not both — alpha is "
@@ -152,6 +170,7 @@ class SolverService:
         self.max_pending_columns = max_pending_columns
         self.matvec_impl = matvec_impl or default_matvec_impl()
         self.tile_n = tile_n
+        self.interpret = interpret
         # With a disk tier configured, the default store persists beside it
         # (``<disk_dir>/graphstore/<fingerprint>.npz``): a restarted service
         # rehydrates its handles AND hits the persisted artifacts — no
@@ -218,6 +237,7 @@ class SolverService:
     def _key(self, handle: GraphHandle, config: PipelineConfig) -> str:
         return artifact_key(handle.fingerprint, config, extra=(
             _SCHEMA, self.precond, self.coarse_n, self.contraction,
+            self.matvec_impl,
             mesh_descriptor(self.mesh, self.shard_axis)))
 
     def artifacts(self, graph: Union[Graph, GraphHandle],
@@ -255,7 +275,8 @@ class SolverService:
             idx, val, hier = artifacts
             fn = make_solver(idx, val, hierarchy=hier, precond=self.precond,
                              matvec_impl=self.matvec_impl, tile_n=self.tile_n,
-                             mesh=self.mesh, shard_axis=self.shard_axis)
+                             mesh=self.mesh, shard_axis=self.shard_axis,
+                             interpret=self.interpret)
             self._solvers[key] = fn
         self._solvers.move_to_end(key)
         while len(self._solvers) > self.cache.capacity:

@@ -47,6 +47,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.graph_ops import shard_map_compat
+from repro.kernels import ops
 from repro.obs import get_tracer
 from repro.obs.device import named_scope
 from repro.solver.device_pcg import (BatchedPCGResult, _pcg_loop,
@@ -151,13 +152,25 @@ def _prep_level(lev, n_sh: int):
                       nc_pad=nc_pad, nc_loc=nc_loc))
 
 
-def _local_matvec(slab_loc: ShardedSlab, axis: str):
+def _local_matvec(slab_loc: ShardedSlab, axis: str, impl: str = "ref",
+                  tile_n: int = 256, interpret=None):
     """Sharded ELL matvec ``[n_loc, k] -> [n_loc, k]`` for shard_map bodies:
     one all_gather of the sharded ``x``, a halo gather, a local contraction.
+
+    ``impl="fused"`` contracts each shard's slab with the batched-RHS
+    Pallas kernel (:func:`repro.kernels.ops.spmv_batched`) instead of the
+    jnp einsum.  Fusion on the sharded plane stops at the per-shard
+    contraction: the halo ``all_gather`` between successive matvecs is a
+    collective, so the Chebyshev sweep cannot fuse across matvecs the way
+    the single-device :func:`~repro.kernels.vcycle_fused.make_fused_chebyshev`
+    kernel does — the smoother stays composed from fused local matvecs.
     """
     def mv(x_loc):
         xg = jax.lax.all_gather(x_loc, axis, tiled=True)     # [n_pad, k]
         x_ext = jnp.concatenate([x_loc, xg[slab_loc.halo]], axis=0)
+        if impl == "fused":
+            return ops.spmv_batched(slab_loc.idx, slab_loc.val, x_ext,
+                                    tile_n=tile_n, interpret=interpret)
         return jnp.einsum("nl,nlk->nk", slab_loc.val, x_ext[slab_loc.idx])
 
     return mv
@@ -166,19 +179,24 @@ def _local_matvec(slab_loc: ShardedSlab, axis: str):
 def make_sharded_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
                         precond: str = "hierarchy", *, mesh,
                         shard_axis: str = "data",
-                        degree: int = 2):
+                        degree: int = 2, matvec_impl: str = "ref",
+                        tile_n: int = 256, interpret=None):
     """Build the jit'd mesh-sharded ``solve(b, tol, maxiter)`` closure.
 
     Same contract as :func:`repro.solver.device_pcg.make_solver`: global
     ``[n, k]`` right-hand sides in, :class:`BatchedPCGResult` out (mean-zero
     solutions, per-column iteration counts, true relative residuals).  The
-    matvec is the local-slab contraction of :func:`_local_matvec`; the
-    Pallas kernel path does not apply here (each shard's slab is
-    jnp-contracted; on a real accelerator mesh the per-shard contraction is
-    where a kernel would slot back in).  ``precond`` supports
+    matvec is the local-slab contraction of :func:`_local_matvec`;
+    ``matvec_impl="fused"`` swaps in the batched-RHS Pallas kernel for each
+    shard's local contraction (see :func:`_local_matvec` for why sharded
+    fusion stops at the per-shard matvec).  ``precond`` supports
     ``"hierarchy"`` and ``"none"``; ``"jacobi"`` is a single-device
     comparison baseline and is not sharded.
     """
+    if matvec_impl not in ("ref", "fused"):
+        raise ValueError(
+            f"sharded matvec_impl must be 'ref' or 'fused', got "
+            f"{matvec_impl!r}")
     if precond == "hierarchy" and hierarchy is None:
         raise ValueError("precond='hierarchy' needs a Hierarchy")
     if precond == "jacobi":
@@ -230,10 +248,11 @@ def make_sharded_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
 
     def _core(b_loc, tol, maxiter, top_loc, levels_loc, chol):
         k = b_loc.shape[1]
-        matvec = _local_matvec(top_loc, axis)
+        matvec = _local_matvec(top_loc, axis, matvec_impl, tile_n, interpret)
 
         # -- preconditioner ------------------------------------------------
-        lev_mvs = [_local_matvec(ll.slab, axis) for ll in levels_loc]
+        lev_mvs = [_local_matvec(ll.slab, axis, matvec_impl, tile_n,
+                                 interpret) for ll in levels_loc]
         smoothers = [make_chebyshev_smoother(mv, ll.diag, lm.rho,
                                              degree=degree)
                      for mv, ll, lm in zip(lev_mvs, levels_loc, level_meta)]

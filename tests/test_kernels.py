@@ -130,6 +130,59 @@ def test_spmv_matches_ref(n, L, tile_n, dtype):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,tile_n", [
+    (100, 64),    # pad = 28
+    (257, 256),   # pad = 255 (worst case: one extra row)
+    (31, 32),     # n < tile_n
+])
+def test_spmv_ell_direct_non_multiple_n(n, tile_n):
+    """Regression: spmv_ell itself (not just the ops wrapper) must accept
+    row counts that are not a multiple of tile_n — it used to assert."""
+    from repro.kernels.spmv_ell import spmv_ell
+
+    L = 5
+    rng = np.random.default_rng(n)
+    idx = jnp.asarray(rng.integers(0, n, size=(n, L)).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal((n, L)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = np.asarray(spmv_ell(idx, val, x, tile_n=tile_n, interpret=True))
+    assert got.shape == (n,)
+    want = np.asarray(ops.spmv_ref(idx, val, x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,L,k,tile_n", [
+    (64, 5, 1, 32),
+    (256, 9, 8, 256),
+    (100, 4, 4, 64),    # pad path
+    (31, 3, 2, 32),     # n < tile_n
+])
+def test_spmv_batched_matches_ref_columns(n, L, k, tile_n):
+    rng = np.random.default_rng(n * L + k)
+    idx = jnp.asarray(rng.integers(0, n, size=(n, L)).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal((n, L)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+    got = np.asarray(ops.spmv_batched(idx, val, x, tile_n=tile_n))
+    assert got.shape == (n, k)
+    for j in range(k):
+        want = np.asarray(ops.spmv_ref(idx, val, x[:, j]))
+        np.testing.assert_allclose(got[:, j], want, rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_batched_extended_x_rows():
+    """The sharded plane gathers from [n_loc + halo] extended vectors: x
+    may have more rows than the slab — extra rows only matter through
+    idx references."""
+    n, L, k, extra = 48, 4, 3, 16
+    rng = np.random.default_rng(9)
+    idx = jnp.asarray(rng.integers(0, n + extra, (n, L)).astype(np.int32))
+    val = jnp.asarray(rng.standard_normal((n, L)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((n + extra, k)).astype(np.float32))
+    got = np.asarray(ops.spmv_batched(idx, val, x, tile_n=32))
+    want = np.einsum("nl,nlk->nk", np.asarray(val), np.asarray(x)[np.asarray(idx)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
 def test_spmv_laplacian_equals_scipy():
     from repro.core import mesh2d
     from repro.kernels.spmv_ell import to_ell
