@@ -1,0 +1,78 @@
+"""Static-analysis section for the bench harness.
+
+Runs the :mod:`repro.analysis` checkers and reports per-checker runtime
+and finding counts as ordinary bench rows, so analyzer cost and tree
+cleanliness ride in the same bench-v1 artifact as every other section
+(``--json`` embeds the findings + ruleset exactly like ``kernels_bench``
+embeds its byte models).  A non-empty finding set is a FAILURE — the
+harness is a second enforcement point beside the CI ``static-analysis``
+job.
+
+``--quick`` (the harness ``--smoke``) runs only the AST checkers; the
+jaxpr/vmem checkers trace real entry points and build suite hierarchies
+(~a minute on CPU interpret mode), which the dedicated CI job already
+covers.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks.common import write_bench_json
+
+
+def run(quick: bool = False):
+    from repro.analysis import run_checks
+
+    checks = ["trace", "locks"] if quick else ["all"]
+    rows = []
+    per_check = {}
+    for check in (checks if checks != ["all"]
+                  else ["jaxpr", "trace", "locks", "vmem"]):
+        t0 = time.perf_counter()
+        findings = run_checks([check])[check]
+        dt = time.perf_counter() - t0
+        per_check[check] = findings
+        rows.append((f"analysis_{check}", dt * 1e6,
+                     f"findings={len(findings)}"))
+    return rows, per_check
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="AST checkers only (trace + locks)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write bench-v1 JSON (rows + findings + ruleset)")
+    args = ap.parse_args(argv)
+
+    rows, per_check = run(quick=args.quick)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    flat = [f for fs in per_check.values() for f in fs]
+    for f in flat:
+        print(f.format())
+
+    if args.json:
+        from repro.analysis.findings import RULES
+        write_bench_json(
+            args.json, "analysis_bench",
+            [{"name": n, "us_per_call": us, "derived": d}
+             for n, us, d in rows],
+            extra={"analysis": {
+                "checks_run": sorted(per_check),
+                "ruleset": [dataclasses.asdict(r) for r in RULES],
+                "findings": [f.as_dict() for f in flat],
+                "finding_count": len(flat),
+            }})
+
+    assert not flat, (
+        f"{len(flat)} static-analysis finding(s) on the tree — "
+        f"see rows above; fix or add a reasoned "
+        f"'# analysis: allow(<rule>)' pragma")
+
+
+if __name__ == "__main__":
+    main()

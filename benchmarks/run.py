@@ -9,6 +9,7 @@
   kernels_bench   -> Pallas kernel shape sweep (interpret mode on CPU)
   solver_bench    -> solver service vs per-call host path
   spectral_bench  -> batched resistance queries + embedding workloads
+  analysis       -> static invariant checkers (zero findings asserted)
 
 Prints ``name,us_per_call,derived`` CSV per section; roofline terms for
 the (arch x shape) cells come from ``repro.launch.dryrun`` artifacts and
@@ -45,9 +46,10 @@ def main(argv=None) -> None:
                          "a Chrome trace-event JSON")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig1_summary, kernels_bench, pdgrass_perf,
-                            replay_bench, solver_bench, spectral_bench,
-                            table2_quality, table3_jbp, table4_scaling)
+    from benchmarks import (analysis_bench, fig1_summary, kernels_bench,
+                            pdgrass_perf, replay_bench, solver_bench,
+                            spectral_bench, table2_quality, table3_jbp,
+                            table4_scaling)
     from benchmarks.common import write_bench_json
 
     if args.trace:
@@ -64,14 +66,16 @@ def main(argv=None) -> None:
         ("solver_bench", solver_bench.main),
         ("replay_bench", replay_bench.main),
         ("spectral_bench", spectral_bench.main),
+        ("analysis", analysis_bench.main),
     ]
     section_argv = ["--quick"] if args.smoke else []
-    solver_json = kernels_json = None
+    solver_json = kernels_json = analysis_json = None
     if args.json:
-        # solver_bench / kernels_bench write their own detail records;
-        # embed them in ours
+        # solver_bench / kernels_bench / analysis write their own detail
+        # records; embed them in ours
         solver_json = args.json + ".solver_bench.tmp"
         kernels_json = args.json + ".kernels_bench.tmp"
+        analysis_json = args.json + ".analysis.tmp"
     section_runtimes = {}
     for name, fn in sections:
         if name in args.skip:
@@ -83,6 +87,8 @@ def main(argv=None) -> None:
             extra_argv = ["--json", solver_json]
         elif kernels_json and name == "kernels_bench":
             extra_argv = ["--json", kernels_json]
+        elif analysis_json and name == "analysis":
+            extra_argv = ["--json", analysis_json]
         t0 = time.perf_counter()
         fn(section_argv + extra_argv)
         dt = time.perf_counter() - t0
@@ -104,7 +110,8 @@ def main(argv=None) -> None:
             args.json, "run",
             {"section_runtimes_s": section_runtimes,
              "skipped": args.skip, "solver_bench": _take(solver_json),
-             "kernels_bench": _take(kernels_json)},
+             "kernels_bench": _take(kernels_json),
+             "analysis": _take(analysis_json)},
             extra={"smoke": args.smoke})
     if args.trace:
         from repro.obs import get_tracer

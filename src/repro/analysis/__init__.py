@@ -1,0 +1,65 @@
+"""Static invariant checkers for the jit/Pallas hot paths, the
+mixed-precision discipline, and the threaded serving plane.
+
+Four checkers, one :class:`~repro.analysis.findings.Finding` shape:
+
+* ``jaxpr`` — :mod:`repro.analysis.jaxpr_audit`: trace the registered
+  hot entry points and walk the jaxprs for banned primitives, f64
+  promotions, while-body host transfers, and RHS-bucket recompile
+  hazards.
+* ``trace`` — :mod:`repro.analysis.trace_lint`: AST lint of
+  ``src/repro`` for host syncs, numpy-on-traced, and Python branches on
+  traced values.
+* ``locks`` — :mod:`repro.analysis.lock_lint`: ``# lock:`` inventory
+  discipline of the service/daemon threading.
+* ``vmem`` — :mod:`repro.analysis.vmem_check`: fused-kernel VMEM
+  capacity and sharded tile/halo layout over the bench suite.
+
+CLI: ``python -m repro.analysis --check all [--json PATH]``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import (  # noqa: F401  (public API)
+    RULES, RULES_BY_ID, RULE_IDS, Finding, write_findings_json)
+
+CHECKS = ("jaxpr", "trace", "locks", "vmem")
+
+
+def _default_root() -> str:
+    """The ``src/repro`` package directory this module was imported from."""
+    return os.path.dirname(os.path.abspath(__file__)).rsplit(
+        os.sep + "analysis", 1)[0]
+
+
+def run_checks(checks: Sequence[str] = ("all",),
+               root: Optional[str] = None) -> Dict[str, List[Finding]]:
+    """Run the selected checkers; returns ``{check: findings}``.
+
+    ``root`` overrides the tree the AST checkers walk (default: the
+    installed ``repro`` package directory); the jaxpr/vmem checkers
+    always run against the imported code.
+    """
+    selected = list(CHECKS) if "all" in checks else list(checks)
+    unknown = sorted(set(selected) - set(CHECKS))
+    if unknown:
+        raise ValueError(
+            f"unknown check(s) {unknown}; valid: all, {', '.join(CHECKS)}")
+    root = root or _default_root()
+    out: Dict[str, List[Finding]] = {}
+    for check in selected:
+        if check == "jaxpr":
+            from repro.analysis.jaxpr_audit import check_registry
+            out[check] = check_registry()
+        elif check == "trace":
+            from repro.analysis.trace_lint import check_tree
+            out[check] = check_tree(root)
+        elif check == "locks":
+            from repro.analysis.lock_lint import check_tree
+            out[check] = check_tree(root)
+        elif check == "vmem":
+            from repro.analysis.vmem_check import check_suite
+            out[check] = check_suite()
+    return out

@@ -1,0 +1,210 @@
+"""Pallas VMEM-footprint and sharded tile/halo layout checker.
+
+The fused V-cycle kernels (:mod:`repro.kernels.vcycle_fused`) hold a
+whole hierarchy level VMEM-resident — slabs, diagonal, and every ``[n,k]``
+vector stream at once — because the Chebyshev recurrence is globally
+data-dependent and cannot row-tile without cross-tile synchronization.
+That is a *capacity contract*: the module docstring bounds it at ~16 MB
+of VMEM per level.  Nothing enforced it until now; a hierarchy config
+change (bigger ``coarse_n``, a denser sparsifier raising the ELL width)
+could silently push a level past the budget and fail at Mosaic lowering
+time on real hardware, far from the config diff that caused it.
+
+``vmem-budget``
+    for every bench-suite graph, build the hierarchy, take
+    ``roofline.hierarchy_level_triples``, and model each level's fused
+    smoother / restrict+residual *residency* (not HBM traffic — the
+    roofline models count stream bytes; residency additionally holds the
+    recurrence temporaries).  A level above the budget must route through
+    the unfused (row-tiled) path.  The batched spmv is also modeled per
+    grid step (tile slabs + the full resident ``x`` block).
+
+``vmem-tile-halo``
+    layout sanity of :func:`repro.solver.sharded.shard_ell_slabs` over
+    the suite: padded row count divisible by the shard count, local rows
+    * shards == padded rows, halo indices in range and consistent with
+    the extended local gather width.
+
+Footprint models (float32 data, int32 indices):
+
+* fused smoother: ``n*L*8`` slab + ``n*4`` diag + ``(3 + guess)*n*k*4``
+  vector streams (r, z_out, one recurrence temporary, plus the initial
+  iterate on post-smooth sweeps).
+* fused restrict+residual: ``n*L*8`` slab + ``n*4`` agg +
+  ``3*n*k*4`` (r, z, residual temporary) + ``n_coarse*k*4`` out.
+* batched spmv per grid step: ``tile_n*L*8`` + ``nx*k*4`` resident x +
+  ``tile_n*k*4`` out tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+#: the documented bound from the vcycle_fused module docstring
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+#: RHS width used for the capacity model — the widest warmup bucket the
+#: service prewarms by default, i.e. the worst case production traces.
+DEFAULT_K = 16
+
+_DTYPE_B = 4
+_IDX_B = 4
+
+
+def fused_smoother_vmem(n: int, L: int, k: int,
+                        with_guess: bool = False) -> int:
+    slab = n * L * (_IDX_B + _DTYPE_B)
+    vecs = (3 + (1 if with_guess else 0)) * n * k * _DTYPE_B
+    return slab + n * _DTYPE_B + vecs
+
+
+def fused_restrict_residual_vmem(n: int, L: int, k: int,
+                                 n_coarse: int) -> int:
+    slab = n * L * (_IDX_B + _DTYPE_B)
+    return slab + n * _IDX_B + 3 * n * k * _DTYPE_B \
+        + n_coarse * k * _DTYPE_B
+
+
+def spmv_batched_step_vmem(tile_n: int, L: int, nx: int, k: int) -> int:
+    return tile_n * L * (_IDX_B + _DTYPE_B) + nx * k * _DTYPE_B \
+        + tile_n * k * _DTYPE_B
+
+
+def check_level_triples(triples: Sequence[Tuple[int, int, int]],
+                        *, k: int = DEFAULT_K,
+                        budget: int = VMEM_BUDGET_BYTES,
+                        file: str = "src/repro/kernels/vcycle_fused.py",
+                        line: int = 1,
+                        graph: str = "<synthetic>") -> List[Finding]:
+    """Model every level's fused-kernel residency against ``budget``.
+
+    Exposed with injectable ``triples``/``budget`` so the planted-fixture
+    tests can drive it without building a pathological real hierarchy.
+    """
+    out: List[Finding] = []
+    for i, (n, L, nc) in enumerate(triples):
+        worst = max(fused_smoother_vmem(n, L, k, with_guess=True),
+                    fused_restrict_residual_vmem(n, L, k, nc))
+        if worst > budget:
+            out.append(Finding(
+                file=file, line=line, rule="vmem-budget",
+                message=f"fused-kernel VMEM footprint "
+                        f"{worst / 2**20:.1f} MiB exceeds the "
+                        f"{budget / 2**20:.0f} MiB budget at level {i} "
+                        f"(n={n}, ell_width={L}, n_coarse={nc}, k={k}) "
+                        f"of graph '{graph}' — route this level through "
+                        f"the unfused row-tiled path"))
+    return out
+
+
+def _fused_def_lines():
+    """(file, smoother line) of the fused kernel entry point, so budget
+    findings land on real source."""
+    try:
+        import inspect
+        from repro.kernels import vcycle_fused
+        file = "src/repro/kernels/vcycle_fused.py"
+        line = inspect.getsourcelines(vcycle_fused.make_fused_chebyshev)[1]
+        return file, line
+    except Exception:
+        return "src/repro/kernels/vcycle_fused.py", 1
+
+
+@functools.lru_cache(maxsize=1)
+def _suite():
+    """The capacity-check graph suite — the solver_bench 'quick'+'full'
+    shapes plus the hub topology whose star levels stress ELL width."""
+    from repro.core.graph import (barabasi_albert, grid2d, mesh2d,
+                                  star_hub)
+    return (
+        ("mesh2d-16x16", mesh2d(16, 16, seed=0)),
+        ("grid2d-20x20", grid2d(20, 20, seed=0)),
+        ("ba-300", barabasi_albert(300, 3, seed=1)),
+        ("star-200", star_hub(200, extra=64, seed=2)),
+    )
+
+
+def check_suite(*, k: int = DEFAULT_K,
+                budget: int = VMEM_BUDGET_BYTES) -> List[Finding]:
+    """Build the suite hierarchies and run both vmem rules."""
+    from repro.launch.roofline import hierarchy_level_triples
+    from repro.solver.device_pcg import ell_laplacian
+    from repro.solver.hierarchy import build_hierarchy
+
+    file, line = _fused_def_lines()
+    out: List[Finding] = []
+    for name, g in _suite():
+        hier = build_hierarchy(g, coarse_n=32)
+        triples = hierarchy_level_triples(hier)
+        out.extend(check_level_triples(triples, k=k, budget=budget,
+                                       file=file, line=line, graph=name))
+        # the top-level batched spmv (solve matvec) residency
+        idx, val = ell_laplacian(g)
+        n, L = int(idx.shape[0]), int(idx.shape[1])
+        step = spmv_batched_step_vmem(256, L, n, k)
+        if step > budget:
+            out.append(Finding(
+                file="src/repro/kernels/vcycle_fused.py", line=1,
+                rule="vmem-budget",
+                message=f"spmv_ell_batched grid-step residency "
+                        f"{step / 2**20:.1f} MiB exceeds the budget on "
+                        f"graph '{name}' (n={n}, L={L}, k={k}) — the "
+                        f"resident x block no longer fits; shrink k or "
+                        f"tile x"))
+        out.extend(_check_shard_layout(idx, val, name))
+    return out
+
+
+def _check_shard_layout(idx, val, graph: str) -> List[Finding]:
+    """Tile divisibility + halo-extent sanity of the sharded slabs."""
+    import numpy as np
+    from repro.solver.sharded import shard_ell_slabs
+
+    out: List[Finding] = []
+    file = "src/repro/solver/sharded.py"
+    n = int(np.asarray(idx).shape[0])
+    for n_sh in (2, 4):
+        if n < n_sh:
+            continue
+        slab, meta = shard_ell_slabs(idx, val, n_sh)
+        halo = np.asarray(slab.halo).reshape(n_sh, int(meta.halo))
+        problems = validate_shard_layout(
+            n_pad=int(meta.n_pad), n_loc=int(meta.n_loc), n_sh=n_sh,
+            halo=halo, idx=np.asarray(slab.idx))
+        for msg in problems:
+            out.append(Finding(
+                file=file, line=1, rule="vmem-tile-halo",
+                message=f"{msg} (graph '{graph}', n_sh={n_sh})"))
+    return out
+
+
+def validate_shard_layout(*, n_pad: int, n_loc: int, n_sh: int,
+                          halo, idx) -> List[str]:
+    """Pure layout predicate — also the fixture-test entry point.
+
+    ``halo``: ``[n_sh, H]`` global row ids each shard gathers;
+    ``idx``: ``[n_pad, L]`` local column coordinates into the
+    ``n_loc + H`` extended local vector.
+    """
+    problems: List[str] = []
+    if n_pad % n_sh != 0:
+        problems.append(
+            f"padded row count {n_pad} not divisible by shard count "
+            f"{n_sh}")
+    if n_loc * n_sh != n_pad:
+        problems.append(
+            f"local rows {n_loc} * shards {n_sh} != padded rows {n_pad}")
+    H = int(halo.shape[1]) if getattr(halo, "ndim", 0) == 2 else 0
+    if (halo < 0).any() or (halo >= max(n_pad, 1)).any():
+        problems.append(
+            f"halo ids outside [0, {n_pad}) — the all-gather would "
+            f"index out of range")
+    ext = n_loc + H
+    if (idx < 0).any() or (idx >= ext).any():
+        problems.append(
+            f"local ELL coordinates outside the extended width "
+            f"{ext} (= n_loc {n_loc} + halo {H}) — the local gather "
+            f"would read past the staged halo")
+    return problems

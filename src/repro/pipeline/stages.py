@@ -131,10 +131,14 @@ def engine_rounds(prep, target, cfg: PipelineConfig, **ctx):
         prep.problem, jnp.int32(target),
         block_size=r.block_size, max_candidates=r.max_candidates,
         stop_at_target=r.stop_at_target, chunk=cfg.chunk)
+    # one designated sync for all three counters instead of three
+    # sequential blocking scalarizations
+    rounds, candidates, killed = jax.device_get(
+        (stats.rounds, stats.candidates, stats.killed_in_block))
     return mask_from_status(prep, status, target), {
-        "rounds": int(stats.rounds),
-        "candidates": int(stats.candidates),
-        "killed_in_block": int(stats.killed_in_block),
+        "rounds": int(rounds),
+        "candidates": int(candidates),
+        "killed_in_block": int(killed),
     }
 
 

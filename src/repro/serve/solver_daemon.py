@@ -153,6 +153,13 @@ class SolverDaemon:
         self.slo_budget_ms = (float(slo_budget_ms) if slo_budget_ms is not None
                               else 4.0 * self.max_batch_delay_ms)
         self._clock = clock
+        # Canonical shared-state inventory, machine-checked by
+        # repro.analysis.lock_lint: every field below may only be touched
+        # inside `with self._cond` or from a *_locked method (the
+        # Condition wraps an RLock, so nested acquisition is fine).
+        # lock: self._cond
+        #   _queue _pending_columns _lanes _closed _drain_on_close
+        #   _thread _cycles _triggers _slo_violations _expired
         self._cond = threading.Condition()
         self._queue: List[_Entry] = []
         self._pending_columns = 0
@@ -189,7 +196,9 @@ class SolverDaemon:
 
     @property
     def running(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        with self._cond:
+            thread = self._thread
+        return thread is not None and thread.is_alive()
 
     def close(self, drain: bool = True,
               timeout: Optional[float] = None) -> None:
@@ -222,7 +231,7 @@ class SolverDaemon:
 
     # -- request plane -------------------------------------------------------
 
-    def _lane(self, tenant: str) -> _Lane:
+    def _lane_locked(self, tenant: str) -> _Lane:
         lane = self._lanes.get(tenant)
         if lane is None:
             lane = self._lanes[tenant] = _Lane(config=TenantConfig())
@@ -249,7 +258,7 @@ class SolverDaemon:
                 raise RuntimeError(
                     "daemon is closed — submit to a live daemon or use the "
                     "synchronous service.submit()/flush() path")
-            lane = self._lane(tenant)
+            lane = self._lane_locked(tenant)
             budget = lane.config.max_pending_columns
             if budget is not None and lane.pending_columns + cols > budget:
                 lane.rejected += 1

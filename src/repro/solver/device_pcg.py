@@ -95,15 +95,14 @@ def _center(x):
     return x - jnp.mean(x, axis=0, keepdims=True)
 
 
-def estimate_dinv_rho(matvec: Callable, diag, iters: int = 12) -> float:
-    """Power-iteration estimate of ``rho(D^-1 L)`` — the smoother's bound.
+def estimate_dinv_rho_device(matvec: Callable, diag, iters: int = 12):
+    """Power-iteration estimate of ``rho(D^-1 L)`` as a DEVICE scalar.
 
-    Deterministic start vector, ~``iters`` gather/scatter sweeps, one host
-    sync for the final Rayleigh-style norm.  Runs once per level at
-    closure-build time (the result is baked into the jit'd V-cycle), so the
-    cost is amortized over every solve the closure serves.  The constant
-    nullspace has eigenvalue 0 and decays under iteration, so no explicit
-    projection is needed.
+    Deterministic start vector, ~``iters`` gather/scatter sweeps; no host
+    sync — callers that estimate several levels (the V-cycle builders)
+    batch all estimates into one ``jax.device_get`` instead of blocking
+    once per level.  The constant nullspace has eigenvalue 0 and decays
+    under iteration, so no explicit projection is needed.
     """
     n = diag.shape[0]
     v = jnp.sin(jnp.arange(n, dtype=jnp.float32) * 1.7 + 0.3)
@@ -116,7 +115,16 @@ def estimate_dinv_rho(matvec: Callable, diag, iters: int = 12) -> float:
 
     v = jax.lax.fori_loop(0, iters, body, v)
     w = matvec(v[:, None])[:, 0] / d
-    return float(jnp.linalg.norm(w))
+    return jnp.linalg.norm(w)
+
+
+def estimate_dinv_rho(matvec: Callable, diag, iters: int = 12) -> float:
+    """Host-scalar convenience over :func:`estimate_dinv_rho_device` for
+    single-level callers (tests, benchmarks).  Runs once per level at
+    closure-build time, so the designated sync below is amortized over
+    every solve the closure serves."""
+    return float(jax.device_get(estimate_dinv_rho_device(matvec, diag,
+                                                         iters)))
 
 
 def make_chebyshev_smoother(matvec: Callable, diag, rho: float,
@@ -172,8 +180,13 @@ def make_vcycle(hier: Hierarchy, *, degree: int = 2,
     from ``(2*degree + 1)`` slab streams per level to 3.
     """
     fused = matvec_impl == "fused"
-    rhos = [estimate_dinv_rho(make_matvec(lev.idx, lev.val, "ref"), lev.diag)
-            for lev in hier.levels]
+    rho_dev = [estimate_dinv_rho_device(
+        make_matvec(lev.idx, lev.val, "ref"), lev.diag)
+        for lev in hier.levels]
+    # the ONE designated build-time sync: every level's spectral-radius
+    # estimate lands in a single device_get instead of one blocking
+    # round-trip per level (the estimates are queued, so they overlap)
+    rhos = [float(r) for r in jax.device_get(rho_dev)]
     if fused:
         matvecs = [make_matvec(lev.idx, lev.val, "fused", tile_n,
                                interpret=interpret) for lev in hier.levels]

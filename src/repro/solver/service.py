@@ -205,6 +205,12 @@ class SolverService:
         self._pending: List[Tuple[SolveTicket, GraphHandle, SolveRequest]] = []
         self._pending_columns = 0
         self._next_ticket = 0
+        # Canonical shared-state inventory, machine-checked by
+        # repro.analysis.lock_lint: every field below may only be touched
+        # inside `with self._lock` or from a *_locked method.
+        # lock: self._lock
+        #   _pending _pending_columns _next_ticket _sched
+        #   _solvers _warmed _timing _conv_digests _solves_by_config
         self._lock = threading.RLock()
         # "submitted" counts admitted requests (rejected ones never enter
         # the queue), so submitted/rejected is the admission split.
@@ -270,18 +276,25 @@ class SolverService:
         """jit'd solve closures are process-local (not picklable), so they
         live beside — not inside — the artifact cache, LRU-bounded to the
         same capacity (each closure retains device arrays + executables)."""
-        fn = self._solvers.get(key)
-        if fn is None:
-            idx, val, hier = artifacts
-            fn = make_solver(idx, val, hierarchy=hier, precond=self.precond,
-                             matvec_impl=self.matvec_impl, tile_n=self.tile_n,
-                             mesh=self.mesh, shard_axis=self.shard_axis,
-                             interpret=self.interpret)
-            self._solvers[key] = fn
-        self._solvers.move_to_end(key)
-        while len(self._solvers) > self.cache.capacity:
-            self._solvers.popitem(last=False)
-        return fn
+        with self._lock:
+            fn = self._solvers.get(key)
+            if fn is not None:
+                self._solvers.move_to_end(key)
+                return fn
+        # build OUTSIDE the lock: make_solver stages device arrays and can
+        # take a while — holding _lock here would stall every submit
+        idx, val, hier = artifacts
+        fn = make_solver(idx, val, hierarchy=hier, precond=self.precond,
+                         matvec_impl=self.matvec_impl, tile_n=self.tile_n,
+                         mesh=self.mesh, shard_axis=self.shard_axis,
+                         interpret=self.interpret)
+        with self._lock:
+            # two racing builders: first insert wins, both get one closure
+            fn = self._solvers.setdefault(key, fn)
+            self._solvers.move_to_end(key)
+            while len(self._solvers) > self.cache.capacity:
+                self._solvers.popitem(last=False)
+            return fn
 
     def warmup(self, graph: Union[Graph, GraphHandle],
                configs: Optional[Sequence[PipelineConfig]] = None,
@@ -331,16 +344,18 @@ class SolverService:
                 # Without jit cache introspection (older jax), fall back to
                 # first-warmup-per-bucket accounting (traffic-compiled
                 # buckets may then book once; re-warms never double-count).
-                compiled = (solve._cache_size() > size_before
-                            if size_before is not None
-                            else (key, k_pad) not in self._warmed)
+                compile_ms = (time.perf_counter() - t0) * 1e3
+                with self._lock:
+                    compiled = (solve._cache_size() > size_before
+                                if size_before is not None
+                                else (key, k_pad) not in self._warmed)
+                    self._warmed.add((key, k_pad))
+                    if compiled:
+                        self._timing["warmup_compile_ms"] += compile_ms
                 if compiled:
-                    compile_ms = (time.perf_counter() - t0) * 1e3
-                    self._timing["warmup_compile_ms"] += compile_ms
                     self.metrics.observe("solver.warmup.compile_ms",
                                          compile_ms)
                     self.metrics.inc("solver.warmup.compiles")
-                self._warmed.add((key, k_pad))
         return sources
 
     # -- request plane -------------------------------------------------------
@@ -475,8 +490,10 @@ class SolverService:
         The returned dict is a **deep copy**: callers may mutate it freely
         (diffing, annotating, json round-trips) without corrupting the
         service's live counters."""
+        with self._lock:
+            digests = sorted(self._conv_digests)
         convergence = {}
-        for d in sorted(self._conv_digests):
+        for d in digests:
             convergence[d] = {
                 "iters": self.metrics.histogram(
                     f"solver.pcg.iters.{d}").snapshot(),
@@ -663,13 +680,13 @@ class SolverService:
         with self._lock:
             self._timing["setup_ms"] += setup_ms
             self._timing["solve_ms"] += solve_ms
+            self._conv_digests.add(config_digest)
         conv = relres <= tol_col
         # Convergence telemetry, fetched ONCE per flush group from arrays
         # this path already materializes (iters/relres came back with the
         # solution — no extra device round-trip).  Padding columns are
         # excluded: only the k real right-hand sides count.
         m = self.metrics
-        self._conv_digests.add(config_digest)
         m.observe_many(f"solver.pcg.iters.{config_digest}",
                        np.asarray(iters[:k], dtype=np.float64))
         m.observe_many(f"solver.pcg.relres.{config_digest}",

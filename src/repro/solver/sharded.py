@@ -51,7 +51,7 @@ from repro.kernels import ops
 from repro.obs import get_tracer
 from repro.obs.device import named_scope
 from repro.solver.device_pcg import (BatchedPCGResult, _pcg_loop,
-                                     estimate_dinv_rho,
+                                     estimate_dinv_rho_device,
                                      make_chebyshev_smoother, make_matvec)
 from repro.solver.hierarchy import Hierarchy
 
@@ -137,7 +137,10 @@ def shard_ell_slabs(idx, val, n_sh: int):
 
 
 def _prep_level(lev, n_sh: int):
-    """One hierarchy level -> (:class:`ShardedLevel`, :class:`LevelMeta`)."""
+    """One hierarchy level -> (:class:`ShardedLevel`, :class:`LevelMeta`,
+    device rho estimate).  The meta's ``rho`` is a placeholder: the caller
+    batches every level's device estimate into one ``device_get`` and
+    patches the metas, instead of blocking once per level here."""
     slab, meta = shard_ell_slabs(lev.idx, lev.val, n_sh)
     diag = np.ones((meta.n_pad,), np.float32)
     diag[:meta.n] = np.asarray(lev.diag, np.float32)
@@ -145,11 +148,13 @@ def _prep_level(lev, n_sh: int):
     nc_pad = nc_loc * n_sh
     agg = np.full((meta.n_pad,), nc_pad, np.int32)   # pad rows: dropped
     agg[:meta.n] = np.asarray(lev.agg, np.int32)
-    rho = estimate_dinv_rho(make_matvec(lev.idx, lev.val, "ref"), lev.diag)
+    rho_dev = estimate_dinv_rho_device(
+        make_matvec(lev.idx, lev.val, "ref"), lev.diag)
     return (ShardedLevel(slab=slab, diag=jnp.asarray(diag),
                          agg=jnp.asarray(agg)),
-            LevelMeta(slab=meta, rho=rho, nc=lev.n_coarse,
-                      nc_pad=nc_pad, nc_loc=nc_loc))
+            LevelMeta(slab=meta, rho=0.0, nc=lev.n_coarse,
+                      nc_pad=nc_pad, nc_loc=nc_loc),
+            rho_dev)
 
 
 def _local_matvec(slab_loc: ShardedSlab, axis: str, impl: str = "ref",
@@ -221,7 +226,11 @@ def make_sharded_solver(idx, val, hierarchy: Optional[Hierarchy] = None,
                          levels=len(hierarchy.levels), n_sh=n_sh):
             prepped = [_prep_level(lev, n_sh) for lev in hierarchy.levels]
         levels = tuple(p[0] for p in prepped)
-        level_meta = tuple(p[1] for p in prepped)
+        # the ONE designated build-time sync: all level rho estimates in a
+        # single device_get (they queue and overlap on device)
+        rhos = jax.device_get([p[2] for p in prepped])
+        level_meta = tuple(p[1]._replace(rho=float(r))
+                           for p, r in zip(prepped, rhos))
         coarse_chol = hierarchy.coarse_chol
         coarse_n = hierarchy.coarse_n
     ncs_loc = -(-coarse_n // n_sh)

@@ -136,7 +136,10 @@ class ResilientTrainer:
             t0 = time.perf_counter()
             params, opt, ef, metrics = self._train_step(
                 params, opt, ef, {k: jnp.asarray(v) for k, v in batch.items()})
-            loss = float(metrics["loss"])
+            # designated sync point: the step must materialize here anyway —
+            # step timing and straggler detection measure completed work
+            host_metrics = jax.device_get(metrics)
+            loss = float(host_metrics["loss"])
             dt = time.perf_counter() - t0
             self.step_times.append(dt)
             med = float(np.median(self.step_times[-20:]))
@@ -145,7 +148,7 @@ class ResilientTrainer:
             losses.append(loss)
             if log_every and step % log_every == 0:
                 print(f"step {step}: loss={loss:.4f} "
-                      f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+                      f"lr={float(host_metrics['lr']):.2e} {dt*1e3:.0f}ms")
             if (step + 1) % self.ckpt_every == 0:
                 ckpt_mod.save(self.ckpt_dir, step + 1, (params, opt, ef))
                 ckpt_mod.prune(self.ckpt_dir)
